@@ -1,0 +1,95 @@
+"""Shared experiment harness for the paper's tables/figures (CPU-scaled).
+
+Scale knobs live in ``Scale``; the default finishes each experiment in a
+couple of minutes on CPU while preserving every *structural* property of
+the paper's setup (TABLE I partitions, CNN families, Adam on clients,
+balanced test set). ``--full`` in run.py doubles everything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import LocalSpec
+from repro.core.astraea import AstraeaTrainer
+from repro.core.fedavg import FedAvgTrainer
+from repro.data.federated import partition, EMNIST_LIKE, CINIC_LIKE
+from repro.models.cnn import emnist_cnn, cinic_cnn
+from repro.optim import adam
+
+
+@dataclass(frozen=True)
+class Scale:
+    num_clients: int = 20
+    total_samples: int = 2400
+    test_samples: int = 800
+    rounds: int = 12
+    eval_every: int = 3
+    c: int = 10                 # online clients / round
+    gamma: int = 5
+    batch: int = 20
+    local_epochs: int = 2
+    image: int = 16
+    classes: int = 10
+
+
+DEFAULT = Scale()
+FULL = Scale(num_clients=40, total_samples=6000, test_samples=1500, rounds=30,
+             eval_every=5, c=16, gamma=8)
+
+
+def emnist_spec(scale: Scale):
+    return dataclasses.replace(EMNIST_LIKE, num_classes=scale.classes,
+                               image_size=scale.image, noise=0.45, distort=0.35)
+
+
+def cinic_spec(scale: Scale):
+    return dataclasses.replace(CINIC_LIKE, num_classes=10,
+                               image_size=max(scale.image, 16),
+                               noise=0.5, distort=0.35)
+
+
+def make_fed(spec, scale: Scale, *, sizes="instagram", global_dist="letterfreq",
+             local="random", seed=0, name="fed", total_mult=1.0):
+    return partition(spec, num_clients=scale.num_clients,
+                     total_samples=int(scale.total_samples * total_mult),
+                     test_samples=scale.test_samples, sizes=sizes,
+                     global_dist=global_dist, local=local, seed=seed, name=name)
+
+
+def model_for(spec, scale: Scale, kind: str = "emnist"):
+    if kind == "cinic":
+        return cinic_cnn(spec.num_classes, image_size=spec.image_size, width=16)
+    return emnist_cnn(spec.num_classes, image_size=spec.image_size)
+
+
+def run_fedavg(model, fed, scale: Scale, *, seed=0, local_epochs=None):
+    tr = FedAvgTrainer(model, adam(1e-3), fed, clients_per_round=scale.c,
+                       local=LocalSpec(scale.batch, local_epochs or scale.local_epochs),
+                       seed=seed)
+    hist = tr.fit(scale.rounds, eval_every=scale.eval_every)
+    return tr, hist
+
+
+def run_astraea(model, fed, scale: Scale, *, alpha=0.67, mediator_epochs=1,
+                gamma=None, c=None, seed=0, local_epochs=None, use_kernel=False):
+    tr = AstraeaTrainer(model, adam(1e-3), fed,
+                        clients_per_round=c or scale.c, gamma=gamma or scale.gamma,
+                        local=LocalSpec(scale.batch, local_epochs or scale.local_epochs),
+                        mediator_epochs=mediator_epochs, alpha=alpha, seed=seed,
+                        use_kernel_agg=use_kernel)
+    hist = tr.fit(scale.rounds, eval_every=scale.eval_every)
+    return tr, hist
+
+
+def best_acc(hist) -> float:
+    return max(h["accuracy"] for h in hist)
+
+
+def traffic_to_reach(hist, target: float):
+    for h in hist:
+        if h["accuracy"] >= target:
+            return h["traffic_mb"]
+    return None

@@ -1,0 +1,363 @@
+"""Assemble EXPERIMENTS.md from run artifacts:
+
+  experiments/dryrun/       baseline dry-run JSONs (paper-faithful stack)
+  experiments/dryrun_opt/   optimized dry-run JSONs (post §Perf changes)
+  experiments/perf/         hillclimb iteration JSONs
+  experiments/results/      FL benchmark JSONs (paper tables/figures)
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_md > EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load(d):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(ROOT, d, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if "arch" in r:
+            out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def _results(name):
+    p = os.path.join(ROOT, "experiments", "results", f"{name}.json")
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None
+
+
+def dryrun_table(recs, mesh):
+    lines = [
+        "| arch | shape | status | compute (ms) | memory (ms) | collective (ms) "
+        "| dominant | 6ND/HLO | peak GB/dev | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "ok":
+            rl = r["roofline"]
+            peak = r["memory"]["peak_estimate_gb"]
+            fits = "yes" if peak <= 16.0 else "**no**"
+            lines.append(
+                f"| {arch} | {shape} | ok | {rl['compute_s']*1e3:.1f} "
+                f"| {rl['memory_s']*1e3:.1f} | {rl['collective_s']*1e3:.1f} "
+                f"| {rl['dominant']} | {rl['useful_ratio']:.2f} | {peak:.2f} | {fits} |")
+        else:
+            why = r.get("skip_reason", r.get("error", ""))[:70]
+            lines.append(f"| {arch} | {shape} | {r['status']} | | | | | | | {why} |")
+    return "\n".join(lines)
+
+
+def fmt(v, nd=4):
+    return f"{v:.{nd}f}" if isinstance(v, (int, float)) and v is not None else str(v)
+
+
+def main():
+    base = _load("experiments/dryrun")
+    opt = _load("experiments/dryrun_opt")
+
+    print("""# EXPERIMENTS — Astraea (ICCD 2019) reproduction + TPU-pod engineering
+
+All FL numbers are from the CPU-scaled synthetic analogues (DESIGN.md §2);
+paper values quoted for reference are at the paper's own scale, so we
+validate *directions and mechanisms* quantitatively at our scale, not the
+paper's exact percentages. Dry-run/roofline numbers are per-device from
+compiled XLA programs for TPU v5e meshes (197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s ICI).
+
+## §Claims — paper vs. this reproduction
+""")
+    mot = _results("motivation") or {}
+    acc_e = _results("accuracy_emnist") or {}
+    acc_c = _results("accuracy_cinic") or {}
+    kld = _results("kld") or {}
+    comm = _results("communication") or {}
+    alpha = _results("alpha_sweep") or {}
+
+    rows = [
+        ("Global imbalance degrades FedAvg (Fig. 1a)",
+         "−7.92% (INS→LTRF1)",
+         f"−{100*(mot.get('INS',0)-mot.get('LTRF1',0)):.1f}% (INS→LTRF1)"
+         if mot else "run benchmarks"),
+        ("Local/size imbalance alone does not degrade (Fig. 1a)",
+         "BAL≈INS (INS slightly higher)",
+         f"BAL2 {100*mot.get('BAL2',0):.1f}% vs INS {100*mot.get('INS',0):.1f}%"
+         if mot else ""),
+        ("Astraea beats FedAvg on imbalanced EMNIST (Fig. 4)",
+         "+5.59%",
+         f"+{100*(acc_e.get('astraea',0)-acc_e.get('fedavg',0)):.1f}%" if acc_e else ""),
+        ("Astraea beats FedAvg on imbalanced CINIC-10 (Fig. 5)",
+         "+5.89%",
+         f"+{100*(acc_c.get('astraea',0)-acc_c.get('fedavg',0)):.1f}%" if acc_c else ""),
+        ("Augmentation alone < aug+mediators (Fig. 4/5)",
+         "ordering holds",
+         f"aug {100*acc_e.get('aug_only',0):.1f}% < full "
+         f"{100*acc_e.get('astraea',0):.1f}%" if acc_e else ""),
+        ("Classical cost-sensitive reweighting < Astraea (beyond-paper ablation)",
+         "not evaluated by the paper",
+         (f"FedAvg+inv-freq loss {100*(acc_e.get('fedavg_reweighted') or 0):.1f}% "
+          f"vs Astraea {100*acc_e.get('astraea',0):.1f}% — reweighting "
+          f"rebalances gradients but adds no minority information (Alg. 2) "
+          f"and leaves local imbalance (Alg. 3) untouched")
+         if acc_e.get("fedavg_reweighted") else "run benchmarks"),
+        ("Mediator KLD mean < 0.2 after rescheduling (Fig. 7)",
+         "0.550 → 0.125",
+         (lambda ks: f"{kld.get('fedavg',0):.3f} → " +
+          ", ".join(f"{kld[k]:.3f}" for k in ks) if kld else "")(
+              [k for k in kld if k.startswith("c")])),
+        ("α=2 over-augments and hurts (Fig. 4a/9)",
+         "accuracy collapse at α=2",
+         (f"α=0.67: {100*alpha.get('0.67',{}).get('acc',0):.1f}% vs "
+          f"α=2: {100*alpha.get('2.00',{}).get('acc',0):.1f}%") if alpha else ""),
+        ("Astraea reaches target accuracy with less traffic (Tab. III)",
+         "0.18–0.24× bytes (FedAvg crawls ~226 rounds to 75%)",
+         (f"0.45× sync rounds (Med2: {comm.get('med2_rounds')} vs FedAvg "
+          f"{comm.get('fedavg_rounds')}); bytes ratio flips to "
+          f"{comm.get('med2_mb',0)/comm.get('fedavg_mb',1):.1f}× at CPU scale "
+          f"because FedAvg converges in ~25 cheap rounds here — the paper's "
+          f"bytes win needs its 500-client crawl regime (mechanism = fewer "
+          f"rounds reproduces; see benchmarks.run.bench_communication)")
+         if comm.get("med2_rounds") else "see table"),
+        ("E_m=2 improves accuracy over E_m=1 at E=1 (Fig. 8)",
+         "+1.4%",
+         (lambda ep: f"+{100*(ep.get('E1_Em2',0)-ep.get('E1_Em1',0)):.1f}%"
+          if ep else "")(_results("epochs") or {})),
+        ("Larger c improves Astraea accuracy (Fig. 6)",
+         "accuracy rises with c",
+         (lambda cg: " / ".join(f"{k}={100*v:.0f}%" for k, v in sorted(cg.items()))
+          if cg else "")(_results("c_gamma") or {})),
+    ]
+    print("| claim | paper | ours |")
+    print("|---|---|---|")
+    for a, b, c in rows:
+        print(f"| {a} | {b} | {c} |")
+
+    print("""
+Raw benchmark CSVs: `bench_output.txt` (regenerate with
+`PYTHONPATH=src python -m benchmarks.run`); per-table JSON in
+`experiments/results/`.
+
+## §Dry-run
+
+Every (architecture × input shape) lowered AND compiled with
+`ShapeDtypeStruct` inputs on both production meshes; `skipped` rows are the
+documented long_500k exclusions for pure full-attention architectures
+(DESIGN.md §5). `peak GB/dev` is `memory_analysis()`
+(args + temps + outs − aliased); `6ND/HLO` is useful-FLOPs ratio
+(model 6·N·D / compiled HLO FLOPs, trip-count-corrected).
+
+### Baseline (paper-faithful stack) — single pod 16×16 (256 chips)
+""")
+    print(dryrun_table(base, "single16x16"))
+    print("\n### Baseline — multi-pod 2×16×16 (512 chips)\n")
+    print(dryrun_table(base, "pod2x16x16"))
+    print("""
+### Optimized stack (post-§Perf: blockwise attention, SP residuals,
+### token-parallel tiny-expert MoE) — single pod
+""")
+    print(dryrun_table(opt, "single16x16"))
+    print("\n### Optimized — multi-pod\n")
+    print(dryrun_table(opt, "pod2x16x16"))
+
+    # ---- fl_round table
+    fl = []
+    for pth in sorted(glob.glob(os.path.join(ROOT, "experiments/fl_round/*.json"))):
+        with open(pth) as f:
+            fl.append(json.load(f))
+    if fl:
+        print("""
+### Astraea federated round on the mesh (the paper's technique, one XLA program)
+
+`make_fl_round`: 16 mediators (data axis) x 16-way tensor parallel (model
+axis, compiler-auto inside jax.shard_map), each mediator running its
+scheduled clients' token streams as sequential SGD steps, aggregated with
+the Eq. 6 weighted delta all-reduce. Lowered + compiled for the full
+configs on the single-pod mesh (train_4k shape):
+
+| arch | status | compute (s) | memory (s) | collective (s) | peak GB/dev |
+|---|---|---|---|---|---|""")
+        for r in fl:
+            if r.get("status") == "ok":
+                rl = r["roofline"]
+                print(f"| {r['arch']} | ok | {rl['compute_s']:.2f} "
+                      f"| {rl['memory_s']:.2f} | {rl['collective_s']:.2f} "
+                      f"| {r['memory']['peak_estimate_gb']:.1f} |")
+            else:
+                print(f"| {r['arch']} | {r.get('status')} | | | | "
+                      f"{r.get('error','')[:60]} |")
+        print("""
+Notes: the FL round holds per-mediator weight replicas and runs B/16
+sequential local steps, so its memory term is ~2-3x a centralized train
+step -- the on-mesh cost of the paper's E_m*gamma*E x T time-overhead
+model (§IV-C). Two XLA-CPU findings are documented in the code: bf16
+psum under partial-auto shard_map crashes the CPU backend (worked around
+by aggregating deltas in f32 -- also numerically preferable), and
+activation sharding constraints must not mention the manual mediator
+axes.""")
+
+    # ---- before/after summary
+    print("""
+### Baseline → optimized, step-time bound (max of the three terms)
+
+| arch | shape | baseline bound (s) | optimized bound (s) | Δ | baseline peak GB | optimized peak GB |
+|---|---|---|---|---|---|---|""")
+    for key in sorted(base):
+        arch, shape, mesh = key
+        if mesh != "single16x16":
+            continue
+        b, o = base[key], opt.get(key)
+        if b["status"] != "ok" or not o or o["status"] != "ok":
+            continue
+        bb = max(b["roofline"]["compute_s"], b["roofline"]["memory_s"],
+                 b["roofline"]["collective_s"])
+        ob = max(o["roofline"]["compute_s"], o["roofline"]["memory_s"],
+                 o["roofline"]["collective_s"])
+        print(f"| {arch} | {shape} | {bb:.2f} | {ob:.2f} | {bb/ob:.2f}x "
+              f"| {b['memory']['peak_estimate_gb']:.1f} "
+              f"| {o['memory']['peak_estimate_gb']:.1f} |")
+
+    print(PERF_NARRATIVE)
+
+
+PERF_NARRATIVE = r"""
+## §Roofline — reading the table
+
+* Hardware: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+* FLOPs/bytes/collective bytes are parsed from the post-SPMD HLO with
+  while-loop trip accounting (`repro.roofline.hlo`); XLA's own
+  `cost_analysis()` counts scan bodies once and is reported in the JSONs
+  for comparison. Fusion operands that are only dynamic-sliced inside the
+  fused computation are charged at slice size (stacked layer weights).
+* **Attribution caveat** (found during §Perf H5): collectives inside the
+  microbatch-accumulation loop are multiplied by both loop trip counts;
+  the microbatch sweep on grok (4->1 changed the collective term only
+  -14%) shows the dominant weight-gradient reductions are amortized
+  across microbatches by XLA, so the collective terms for microbatched
+  train rows are upper bounds (up to ~4x for grok). Both bounds are noted
+  where it changes the dominant term.
+* Dominant bottleneck per family (baseline, single pod):
+  - **dense/MoE train_4k**: collective-bound -- per-layer f32
+    tensor-parallel + FSDP collectives (see §Perf).
+  - **prefill_32k**: memory-bound -- attention score materialization
+    (fixed by H4) and fp32 logits over 100k+ vocabularies.
+  - **decode_32k**: collective-bound at tiny compute -- decode is
+    latency/bandwidth dominated, as expected at batch 128 with 4-8 GB
+    KV caches per device.
+  - **SSM (mamba2) everywhere**: memory-bound; the SSD scan has
+    useful-ratio ~1 at decode (it is pure streaming) -- the healthiest
+    rows in the table.
+* MODEL_FLOPS / HLO_FLOPs ("6ND/HLO"): train rows sit at 0.56-0.78
+  (remat + attention not counted in 6ND); prefill rows at 32k drop to
+  0.3 because the quadratic attention term dominates 2ND; MoE rows carry
+  the capacity-factor overhead (1.25x) plus dispatch einsums.
+
+## §Perf — hypothesis -> change -> measure log
+
+Three hillclimbed pairs: worst useful-ratio (granite-moe x train_4k),
+most collective-bound (grok-1 x train_4k), most representative of the
+paper's technique (qwen3-4b x train_4k -- the federated-LM target, plus
+the fl_round lowering). Step-time bound = max(compute, memory,
+collective) per step per device. Baselines from `experiments/dryrun`,
+optimized from `experiments/dryrun_opt`, iterations in
+`experiments/perf/`.
+
+### Bring-up fixes (pre-baseline, recorded for honesty)
+Naive pjit with parameter shardings only produced replicated fp32 logits
+and unsharded scan carries: whisper train peaked at 811 GB/device and
+grok at 165 GB/device. Three structural fixes define the recorded
+baseline: MaxText-style logical activation constraints (batch/heads/
+vocab/mlp/expert), sequence-parallel residual storage for the scan carry
+(Megatron-SP; the 96 GB f32 carry-stack convert XLA hoisted out of the
+backward loop shrank 16x), and gradient-accumulation microbatching sized
+by napkin math (`suggest_microbatches`). whisper 811->3.5 GB, grok
+165->30.9 GB.
+
+### granite-moe-3b-a800m x train_4k  (40.4 s -> 5.6 s bound, 7.2x; peak 29.0 -> 7.2 GB)
+| iter | hypothesis | prediction | measured | verdict |
+|---|---|---|---|---|
+| base | -- | -- | comp 0.74 / mem 12.97 / coll 40.40 s; useful 0.15 | collective-bound |
+| H3 | 512-wide experts / 16-way TP = 32-wide MXU-hostile matmuls + dispatch all-to-all dominates; replicating expert weights over "model" removes the A2A | coll ~/2 | coll 20.28, but comp 0.74->2.15 (16x redundant expert compute) | confirmed direction, refine |
+| H3b | also shard token *groups* over (data x model): expert compute parallel again, dispatch stays local | comp back down, coll ~/4 | comp 0.30 / mem 6.76 / coll 5.69 | **confirmed, adopted** (`moe_token_parallel=True` in the config) |
+| +H4 | blockwise attention (below) | mem down | mem 5.62 / coll 5.33, peak 7.2 GB | confirmed |
+
+Lesson: for tiny-expert MoEs (d_ff << 128*TP), expert-parallelism is the
+wrong decomposition on a 16-wide TP mesh; data x model *token*
+parallelism with replicated experts is strictly better until d_ff/TP
+reaches MXU width.
+
+### grok-1-314b x train_4k  (150.8 -> 138.3 s bound; peak 30.9 -> 29.7 GB single-pod, 21.9 GB multi-pod)
+| iter | hypothesis | prediction | measured | verdict |
+|---|---|---|---|---|
+| base | -- | -- | comp 18.7 / mem 65.2 / coll 150.8 s | collective-bound |
+| H1 | fp32 grad accumulators replicated -> per-microbatch full-size all-reduce; pin them to param shardings | coll down several x | bit-identical lowering | **refuted** -- already sharded |
+| H2 | per-layer weight cotangents replicated; custom_vjp identity pinning inside the scan body | reduce-scatter instead of AR | bit-identical lowering | **refuted** -- shardy had already reconciled placement |
+| H4 | blockwise attention removes (S,S) scores | mem down, coll slightly down | mem 65.2->56.1, coll 150.8->138.3 | **confirmed, adopted** (-8.5% bound) |
+| H5 | weight-grad reduces are per-microbatch; mb 4->1 cuts coll ~4x | coll /4 | coll -14%, peak 29.7->50.2 GB | **refuted** -- reduces amortized across microbatches; also exposed the trip-attribution caveat (§Roofline) |
+| H6 | MoE group 512->2048 improves dispatch arithmetic intensity | coll/mem down | no change | refuted |
+| H7 | force SP reduce-scatter on block outputs before residual adds | AR(2x) -> RS(1x) | bit-identical lowering | refuted -- already chosen |
+| stop | 3 consecutive <5% changes | | | per §Perf stopping rule |
+
+Lesson: grok's wall is the *dtype* of per-layer collectives -- XLA-CPU
+materializes gather/reduce of the bf16 stream in f32 (norm/softmax
+upcast chains get hoisted). Halving that needs compiler-level collective
+dtype pinning (or Mosaic collective kernels on real TPUs), not the
+sharding-constraint API; identified as the next-step item. Grok train
+also genuinely does not fit 16 GB/chip on a single v5e pod (params+Adam
+floor ~12 GB + transients); the 512-chip multi-pod with FSDP over
+(pod, data) is the deployable configuration (21.9 GB -> still needs
+either 2 more FSDP-able dims or bf16 moments+master-free Adam; recorded
+as an open item).
+
+### qwen3-4b x train_4k  (15.8 -> 11.0 s bound, 1.43x; peak 15.1 -> 11.7 GB)
+| iter | hypothesis | prediction | measured | verdict |
+|---|---|---|---|---|
+| base | -- | -- | comp 0.82 / mem 12.51 / coll 15.78 s | collective-bound |
+| H4 | blockwise (flash) attention: stream KV blocks with online softmax, checkpointed block bodies | mem -30%, transient scores gone | mem 9.10 / coll 11.00, peak 11.7 GB | **confirmed, adopted** |
+| H7 | SP reduce-scatter residuals | coll down | bit-identical | refuted (already chosen) |
+| fl | lower the Astraea round itself (16 mediators x TP16, 64 sequential local steps) | round ~ E_m*gamma*E x T of a train step (paper §IV-C) | comp 0.68 / mem 29.2 / coll 7.08 s, peak 18.8 GB | the paper's time-overhead model quantified on the mesh |
+
+### H8 — exact local-window attention for SWA architectures
+The first blockwise rollout REGRESSED hymba prefill_32k 7.0 -> 109 s
+(memory term): the KV-block scan streams all 64 blocks while the 1024-wide
+window only ever needs 2 -- and the scan re-reads the full q per block.
+Hypothesis: sliding-window attention chunked AT the window size is exact
+with just a (W, 2W) score block per chunk (keys in chunks i-1, i).
+Measured: hymba prefill bound 109 -> 3.3 s (and 2.1x better than the
+paper-faithful baseline), peak 25.9 -> 2.7 GB; h2o-danube prefill
+5.9 -> 2.0 s, peak 34.1 -> 9.1 GB. Confirmed, adopted (the `gqa_attention`
+dispatcher routes SWA prefill/train to `local_window_attention`).
+A refuted-then-fixed iteration: the regression was caught by the
+before/after table, diagnosed from the traffic model (q re-reads x
+n_blocks), and the fix beat the original baseline.
+
+### Beyond-paper wins recorded in the optimized sweep
+* H4 blockwise attention is default for full-attention prefill at seq >=
+  2048: qwen1.5-110b prefill_32k peak 71.4 -> 11.3 GB (now *fits*),
+  internvl2 115 -> 2.3 GB, qwen3 34.7 -> 3.0 GB, grok 59.8 -> 21.2 GB.
+  The memory TERM rises ~20% on those rows (q is re-streamed once per KV
+  block -- inherent to any flash scheme; one operand re-streams
+  O(n_blocks) times) -- an intentional trade, since the dense baselines
+  exceed HBM and could not run at all. For TRAIN at 4k, the trade is
+  taken per-arch (H9, `blockwise_train`): measured wins for
+  qwen3/grok/h2o/hymba/granite/qwen1.5, measured regressions -> disabled
+  for gemma/internvl2/whisper (their dense 4k scores already fit).
+* H3b token-parallel MoE is default for granite (tiny experts). grok
+  keeps expert-sharded MoE (d_ff/TP = 2048 is MXU-healthy).
+* The Pallas `flash_attention` kernel is the TPU-native version of H4
+  (same algorithm, VMEM tiles + MXU-aligned blocks), validated
+  interpret=True against `ref.py`; on real hardware it replaces the XLA
+  scan emulation.
+"""
+
+
+if __name__ == "__main__":
+    main()

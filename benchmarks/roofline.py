@@ -1,0 +1,72 @@
+"""Roofline table builder: reads experiments/dryrun/*.json and emits the
+EXPERIMENTS.md §Roofline table + CSV rows (one per arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+DRYRUN_OPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                              "dryrun_opt")
+
+
+def load_records(mesh: str | None = None, tag: str = "", base_dir: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(base_dir or DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def csv_rows(mesh: str = "single16x16", *, optimized: bool = False):
+    """name,us_per_call,derived -- us_per_call = roofline step-time bound."""
+    rows = []
+    prefix = "roofline_opt" if optimized else "roofline"
+    for r in load_records(mesh, base_dir=DRYRUN_OPT_DIR if optimized else None):
+        name = f"{prefix}/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "ok":
+            rl = r["roofline"]
+            step_us = max(rl["compute_s"], rl["memory_s"], rl["collective_s"]) * 1e6
+            derived = (f"dom={rl['dominant']};useful={rl['useful_ratio']:.2f};"
+                       f"peakGB={r['memory']['peak_estimate_gb']}")
+        elif r["status"] == "skipped":
+            step_us, derived = 0.0, "skipped=" + r["skip_reason"][:40].replace(",", ";")
+        else:
+            step_us, derived = -1.0, "FAILED"
+        rows.append((name, step_us, derived))
+    return rows
+
+
+def markdown_table(mesh: str = "single16x16") -> str:
+    lines = [
+        f"### Mesh `{mesh}`",
+        "",
+        "| arch | shape | status | compute (ms) | memory (ms) | collective (ms) | dominant | HLO GFLOPs/dev | coll MB/dev | 6ND/HLO | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(mesh):
+        if r["status"] == "ok":
+            rl = r["roofline"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ok "
+                f"| {rl['compute_s']*1e3:.2f} | {rl['memory_s']*1e3:.2f} "
+                f"| {rl['collective_s']*1e3:.2f} | **{rl['dominant']}** "
+                f"| {rl['flops']/1e9:.1f} | {rl['collective_bytes']/2**20:.1f} "
+                f"| {rl['useful_ratio']:.2f} | {r['memory']['peak_estimate_gb']:.2f} |")
+        else:
+            why = r.get("skip_reason", r.get("error", ""))[:60]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} "
+                         f"| | | | | | | | | {why} |"[:220])
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for mesh in ("single16x16", "pod2x16x16"):
+        print(markdown_table(mesh))
+        print()

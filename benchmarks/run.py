@@ -1,0 +1,343 @@
+"""Benchmark harness: one function per paper table/figure + roofline/kernels.
+
+Prints ``name,us_per_call,derived`` CSV per the repo convention. FL
+benchmarks report ``us_per_call`` as wall-time per synchronization round
+and ``derived`` as the accuracy/KLD/traffic result the paper's artifact
+claims; roofline rows derive from the dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.run                # default scale
+  PYTHONPATH=src python -m benchmarks.run --only motivation,kernels
+  PYTHONPATH=src python -m benchmarks.run --full         # paper-closer scale
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import fl_experiments as E
+from benchmarks import roofline as R
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "results")
+
+
+def _emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _save(name, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=2, default=float)
+
+
+# ----------------------------------------------------------------------
+# Fig. 1(a): imbalance types degrade FedAvg (TABLE I datasets)
+# ----------------------------------------------------------------------
+
+def bench_motivation(scale: E.Scale):
+    spec = E.emnist_spec(scale)
+    model = E.model_for(spec, scale)
+    results = {}
+    settings = {
+        "BAL1": dict(sizes="even", global_dist="balanced", local="matched"),
+        "BAL2": dict(sizes="even", global_dist="balanced", local="random"),
+        "INS": dict(sizes="instagram", global_dist="balanced", local="random"),
+        "LTRF1": dict(sizes="instagram", global_dist="letterfreq", local="random"),
+        "LTRF2": dict(sizes="instagram", global_dist="letterfreq", local="random"),
+    }
+    for name, kw in settings.items():
+        mult = 2.0 if name == "LTRF2" else 1.0
+        fed = E.make_fed(spec, scale, name=name, total_mult=mult, **kw)
+        t0 = time.time()
+        _, hist = E.run_fedavg(model, fed, scale)
+        dt = (time.time() - t0) / scale.rounds * 1e6
+        acc = E.best_acc(hist)
+        results[name] = acc
+        _emit(f"motivation/{name}", dt, f"top1={acc:.4f}")
+    delta = results["INS"] - results["LTRF1"]
+    _emit("motivation/global_imbalance_loss", 0.0,
+          f"acc_drop={delta:.4f} (paper: 0.0792)")
+    _save("motivation", results)
+
+
+# ----------------------------------------------------------------------
+# Fig. 4/5: Astraea vs FedAvg on imbalanced EMNIST-like and CINIC-like
+# ----------------------------------------------------------------------
+
+def bench_accuracy(scale: E.Scale):
+    for kind, specf in (("emnist", E.emnist_spec), ("cinic", E.cinic_spec)):
+        spec = specf(scale)
+        model = E.model_for(spec, scale, kind)
+        gd = "letterfreq" if kind == "emnist" else "normal"
+        fed = E.make_fed(spec, scale, global_dist=gd, name=f"imb-{kind}")
+        t0 = time.time()
+        _, fh = E.run_fedavg(model, fed, scale)
+        fed_t = (time.time() - t0) / scale.rounds * 1e6
+        t0 = time.time()
+        _, ah = E.run_astraea(model, fed, scale, alpha=0.67, mediator_epochs=1)
+        ast_t = (time.time() - t0) / scale.rounds * 1e6
+        _, aug_h = E.run_astraea(model, fed, scale, alpha=0.67, gamma=1)
+        fa, aa, ga = E.best_acc(fh), E.best_acc(ah), E.best_acc(aug_h)
+        _emit(f"accuracy/{kind}/fedavg", fed_t, f"top1={fa:.4f}")
+        _emit(f"accuracy/{kind}/astraea", ast_t, f"top1={aa:.4f}")
+        _emit(f"accuracy/{kind}/aug_only", 0.0, f"top1={ga:.4f}")
+        ra = None
+        if kind == "emnist":
+            # ablation partner: cost-sensitive loss reweighting (beyond-paper
+            # baseline from classical imbalanced learning; see core.reweighting)
+            from repro.core.reweighting import ReweightedFedAvgTrainer
+            from repro.core import LocalSpec
+            from repro.optim import adam
+            tr = ReweightedFedAvgTrainer(model, adam(1e-3), fed,
+                                         clients_per_round=scale.c,
+                                         local=LocalSpec(scale.batch,
+                                                         scale.local_epochs),
+                                         seed=0)
+            rh = tr.fit(scale.rounds, eval_every=scale.eval_every)
+            ra = E.best_acc(rh)
+            _emit(f"accuracy/{kind}/fedavg_reweighted", 0.0, f"top1={ra:.4f}")
+        _emit(f"accuracy/{kind}/improvement", 0.0,
+              f"delta={aa-fa:+.4f} (paper: {'+0.0559' if kind=='emnist' else '+0.0589'})")
+        _save(f"accuracy_{kind}", {"fedavg": fa, "astraea": aa, "aug_only": ga,
+                                   "fedavg_reweighted": ra})
+
+
+# ----------------------------------------------------------------------
+# Fig. 4(a)/Fig. 9: alpha sweep incl. the alpha=2 failure + storage cost
+# ----------------------------------------------------------------------
+
+def bench_alpha_sweep(scale: E.Scale):
+    spec = E.emnist_spec(scale)
+    model = E.model_for(spec, scale)
+    fed = E.make_fed(spec, scale, name="alpha")
+    out = {}
+    for alpha in (None, 0.33, 0.67, 1.0, 2.0):
+        t0 = time.time()
+        tr, hist = E.run_astraea(model, fed, scale, alpha=alpha, gamma=1,
+                                 mediator_epochs=1)
+        dt = (time.time() - t0) / scale.rounds * 1e6
+        acc = E.best_acc(hist)
+        tag = "none" if alpha is None else f"{alpha:.2f}"
+        out[tag] = {"acc": acc, "extra_storage": tr.extra_storage_frac}
+        _emit(f"alpha_sweep/{tag}", dt,
+              f"top1={acc:.4f};extra_storage={tr.extra_storage_frac:.2f}")
+    _save("alpha_sweep", out)
+
+
+# ----------------------------------------------------------------------
+# Fig. 7: KLD distribution of mediators vs FedAvg clients
+# ----------------------------------------------------------------------
+
+def bench_kld(scale: E.Scale):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import distribution as dist, scheduling, augmentation
+    spec = E.emnist_spec(scale)
+    fed = E.make_fed(spec, scale, name="kld")
+    counts = fed.client_counts()
+    fedavg_kld = float(np.mean(np.asarray(dist.kld_to_uniform(jnp.asarray(counts)))))
+    _emit("kld/fedavg_clients", 0.0, f"kld_mean={fedavg_kld:.3f} (paper: 0.550)")
+
+    new_x, new_y, plan, _ = augmentation.rebalance_federation(
+        jax.random.PRNGKey(0), fed.client_images, fed.client_labels,
+        fed.num_classes, alpha=0.83)
+    aug_counts = np.stack([np.bincount(y, minlength=fed.num_classes) for y in new_y])
+    aug_kld = float(np.mean(np.asarray(dist.kld_to_uniform(
+        jnp.asarray(aug_counts * 1.0)))))
+    _emit("kld/aug_clients", 0.0, f"kld_mean={aug_kld:.3f} (paper: 0.498)")
+
+    out = {"fedavg": fedavg_kld, "aug": aug_kld}
+    for c, gamma in [(scale.c, scale.gamma), (scale.c, scale.gamma * 2),
+                     (scale.num_clients, scale.gamma)]:
+        rng = np.random.default_rng(0)
+        sel = rng.choice(len(aug_counts), size=min(c, len(aug_counts)), replace=False)
+        t0 = time.time()
+        meds = scheduling.reschedule(aug_counts[sel].astype(float), gamma)
+        dt = (time.time() - t0) * 1e6
+        stats = scheduling.schedule_stats(meds)
+        out[f"c{c}_g{gamma}"] = stats["kld_mean"]
+        _emit(f"kld/mediators_c{c}_g{gamma}", dt,
+              f"kld_mean={stats['kld_mean']:.3f} (paper: 0.125; target <0.2)")
+    _save("kld", out)
+
+
+# ----------------------------------------------------------------------
+# Fig. 6: c vs gamma grid
+# ----------------------------------------------------------------------
+
+def bench_c_gamma(scale: E.Scale):
+    spec = E.emnist_spec(scale)
+    model = E.model_for(spec, scale)
+    fed = E.make_fed(spec, scale, name="cg")
+    out = {}
+    for c in (scale.c, min(scale.c * 2, scale.num_clients)):
+        for gamma in (scale.gamma, scale.gamma * 2):
+            t0 = time.time()
+            _, hist = E.run_astraea(model, fed, scale, c=c, gamma=gamma)
+            dt = (time.time() - t0) / scale.rounds * 1e6
+            acc = E.best_acc(hist)
+            out[f"c{c}_g{gamma}"] = acc
+            _emit(f"c_gamma/c{c}_g{gamma}", dt, f"top1={acc:.4f}")
+    _save("c_gamma", out)
+
+
+# ----------------------------------------------------------------------
+# Fig. 8: local epochs E vs mediator epochs E_m
+# ----------------------------------------------------------------------
+
+def bench_epochs(scale: E.Scale):
+    spec = E.emnist_spec(scale)
+    model = E.model_for(spec, scale)
+    fed = E.make_fed(spec, scale, name="epochs")
+    out = {}
+    for e in (1, scale.local_epochs * 2):
+        for em in (1, 2):
+            t0 = time.time()
+            _, hist = E.run_astraea(model, fed, scale, local_epochs=e,
+                                    mediator_epochs=em)
+            dt = (time.time() - t0) / scale.rounds * 1e6
+            acc = E.best_acc(hist)
+            out[f"E{e}_Em{em}"] = acc
+            _emit(f"epochs/E{e}_Em{em}", dt, f"top1={acc:.4f}")
+    _save("epochs", out)
+
+
+# ----------------------------------------------------------------------
+# TABLE III: communication cost to a target accuracy
+# ----------------------------------------------------------------------
+
+def bench_communication(scale: E.Scale):
+    """Paper Table III. The paper's 0.18x bytes ratio lives in the regime
+    where FedAvg needs hundreds of cheap rounds to crawl to the target
+    (500 clients, 47 classes); at CPU scale FedAvg converges in ~25
+    rounds, so the binding cost is SYNC ROUNDS, not bytes. We report both:
+    rounds-to-target (the mechanism: Astraea converges ~3x faster per
+    round) and the traffic ledger (which flips at this scale -- an honest
+    scale-dependence finding, see EXPERIMENTS.md §Claims)."""
+    import dataclasses
+    lscale = dataclasses.replace(scale, rounds=24, eval_every=2)
+    spec = E.emnist_spec(lscale)
+    model = E.model_for(spec, lscale)
+    fed = E.make_fed(spec, lscale, name="comm")
+    _, fh = E.run_fedavg(model, fed, dataclasses.replace(lscale, c=6),
+                         local_epochs=4)
+    fed_best = E.best_acc(fh)
+    target = 0.95 * fed_best
+    base_mb = E.traffic_to_reach(fh, target)
+    base_rounds = next((h["round"] for h in fh if h["accuracy"] >= target), None)
+    _emit("communication/fedavg_baseline", 0.0,
+          f"target={target:.3f};mb={base_mb:.1f};rounds={base_rounds}")
+    out = {"target": target, "fedavg_mb": base_mb, "fedavg_rounds": base_rounds}
+    for em in (1, 2, 3):
+        _, hist = E.run_astraea(model, fed,
+                                dataclasses.replace(lscale, c=18, gamma=6),
+                                mediator_epochs=em, local_epochs=1)
+        mb = E.traffic_to_reach(hist, target)
+        rnd = next((h["round"] for h in hist if h["accuracy"] >= target), None)
+        mb_ratio = f"{mb/base_mb:.2f}x" if (mb and base_mb) else "n/a"
+        rnd_ratio = f"{rnd/base_rounds:.2f}x" if (rnd and base_rounds) else "n/a"
+        out[f"med{em}_mb"] = mb
+        out[f"med{em}_rounds"] = rnd
+        _emit(f"communication/med{em}", 0.0,
+              f"mb={f'{mb:.1f}' if mb else 'not-reached'};mb_ratio={mb_ratio};"
+              f"rounds={rnd};round_ratio={rnd_ratio} "
+              f"(paper Med2 bytes: 0.18x; mechanism = fewer rounds)")
+    _save("communication", out)
+
+
+# ----------------------------------------------------------------------
+# Kernel microbenchmarks (wall time per call, interpret mode on CPU)
+# ----------------------------------------------------------------------
+
+def bench_kernels(scale: E.Scale):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+
+    def timeit(fn, *args, n=5):
+        jax.block_until_ready(fn(*args))
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.time() - t0) / n * 1e6
+
+    d = jax.random.normal(key, (8, 1 << 16), jnp.float32)
+    w = jnp.arange(1.0, 9.0)
+    us_k = timeit(lambda a, b: ops.fedavg_agg(a, b), d, w)
+    us_r = timeit(lambda a, b: ref.fedavg_agg(a, b), d, w)
+    _emit("kernels/fedavg_agg", us_k, f"ref_us={us_r:.1f};n=8x65536")
+
+    med = jax.random.uniform(key, (47,)) * 100
+    cli = jax.random.uniform(key, (512, 47)) * 50
+    us_k = timeit(lambda a, b: ops.kld_score(a, b), med, cli)
+    us_r = timeit(lambda a, b: ref.kld_score(a, b), med, cli)
+    _emit("kernels/kld_score", us_k, f"ref_us={us_r:.1f};n=512x47")
+
+    q = jax.random.normal(key, (1, 512, 4, 64))
+    k2 = jax.random.normal(key, (1, 512, 2, 64))
+    v2 = jax.random.normal(key, (1, 512, 2, 64))
+    us_k = timeit(lambda a, b, c: ops.flash_attention(a, b, c), q, k2, v2)
+    _emit("kernels/flash_attention", us_k, "interpret-mode;s=512,h=4,d=64")
+
+    b, nc, L, h, p, n = 2, 8, 64, 4, 64, 32
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, nc, L, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, nc, L, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, nc, L, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, nc, L, n)) * 0.5
+    us_k = timeit(lambda *a: ops.ssd_chunk(*a)[0], x, dt, A, Bm, Cm)
+    us_r = timeit(lambda *a: ref.ssd_chunk(*a)[0], x, dt, A, Bm, Cm)
+    _emit("kernels/ssd_chunk", us_k, f"ref_us={us_r:.1f};b2xc8xL64xh4")
+
+
+# ----------------------------------------------------------------------
+# Roofline rows (from the dry-run artifacts)
+# ----------------------------------------------------------------------
+
+def bench_roofline(scale: E.Scale):
+    for mesh in ("single16x16", "pod2x16x16"):
+        for name, us, derived in R.csv_rows(mesh):
+            _emit(name, us, derived)
+    # post-§Perf optimized stack (blockwise/local-window attention,
+    # token-parallel MoE) -- before/after table in EXPERIMENTS.md
+    for mesh in ("single16x16", "pod2x16x16"):
+        for name, us, derived in R.csv_rows(mesh, optimized=True):
+            _emit(name, us, derived)
+
+
+ALL = {
+    "motivation": bench_motivation,
+    "accuracy": bench_accuracy,
+    "alpha_sweep": bench_alpha_sweep,
+    "kld": bench_kld,
+    "c_gamma": bench_c_gamma,
+    "epochs": bench_epochs,
+    "communication": bench_communication,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    scale = E.FULL if args.full else E.DEFAULT
+    names = args.only.split(",") if args.only else list(ALL)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        ALL[name](scale)
+        print(f"# {name} finished in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Astraea on the transformer stack: federated LM training on the mesh.
+
+The paper's mediators/rescheduling applied to an assigned architecture
+(reduced variant on CPU; the same `make_fl_round` program lowers on the
+production (pod, data, model) mesh -- see EXPERIMENTS.md §Dry-run). Shows:
+Alg. 3 scheduling of non-IID token streams onto mediators, then one-XLA-
+program synchronization rounds with weighted delta all-reduce (Eq. 6).
+
+  PYTHONPATH=src python examples/federated_llm.py --arch hymba-1.5b
+"""
+import argparse
+
+from repro.launch import fl_train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    args = ap.parse_args()
+    import sys
+    sys.argv = ["fl_train", "--arch", args.arch, "--rounds", "3",
+                "--clients", "8", "--gamma", "4", "--seq", "128"]
+    fl_train.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: Astraea vs FedAvg on a globally-imbalanced federation.
+
+The 60-second tour of the public API: build a TABLE I-style federated
+dataset, train the paper's CNN with FedAvg and with Astraea, print the
+accuracy + mediator-KLD + traffic comparison.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+from repro.core import LocalSpec
+from repro.core.astraea import AstraeaTrainer
+from repro.core.fedavg import FedAvgTrainer
+from repro.data.federated import partition, EMNIST_LIKE
+from repro.models.cnn import emnist_cnn
+from repro.optim import adam
+
+
+def main():
+    spec = dataclasses.replace(EMNIST_LIKE, num_classes=10, image_size=16,
+                               noise=0.45, distort=0.35)
+    fed = partition(spec, num_clients=16, total_samples=1600, test_samples=600,
+                    sizes="instagram", global_dist="letterfreq", local="random",
+                    seed=0, name="LTRF-quickstart")
+    model = emnist_cnn(spec.num_classes, image_size=16)
+    local = LocalSpec(batch_size=20, epochs=2)
+    rounds = 8
+
+    print("== FedAvg (baseline) ==")
+    fedavg = FedAvgTrainer(model, adam(1e-3), fed, clients_per_round=8,
+                           local=local, seed=0)
+    fh = fedavg.fit(rounds, eval_every=4)
+    for h in fh:
+        print(f"  round {h['round']:3d}  acc={h['accuracy']:.3f}  "
+              f"traffic={h['traffic_mb']:.0f} MB")
+
+    print("== Astraea (augmentation alpha=0.67 + mediators gamma=4) ==")
+    astraea = AstraeaTrainer(model, adam(1e-3), fed, clients_per_round=8,
+                             gamma=4, local=local, mediator_epochs=1,
+                             alpha=0.67, seed=0)
+    ah = astraea.fit(rounds, eval_every=4)
+    for h in ah:
+        print(f"  round {h['round']:3d}  acc={h['accuracy']:.3f}  "
+              f"traffic={h['traffic_mb']:.0f} MB  "
+              f"mediator_kld={h.get('mediator_kld_mean', float('nan')):.3f}")
+
+    print(f"\nAstraea improvement: "
+          f"{ah[-1]['accuracy'] - fh[-1]['accuracy']:+.3f} top-1 "
+          f"(paper: +0.0559 on imbalanced EMNIST)")
+    print(f"extra client storage from augmentation: "
+          f"{astraea.extra_storage_frac:.0%} (paper Fig. 9 trade-off)")
+
+
+if __name__ == "__main__":
+    main()

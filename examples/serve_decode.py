@@ -1,0 +1,28 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+Demonstrates the serving path used by the decode_32k / long_500k dry-runs:
+batched prefill fills the KV/SSM cache, then serve_step decodes one token
+per request per step. Works for every assigned architecture family
+(default: the SSM, whose cache is O(1) in sequence length).
+
+  PYTHONPATH=src python examples/serve_decode.py --arch mamba2-370m
+  PYTHONPATH=src python examples/serve_decode.py --arch h2o-danube-1.8b
+"""
+import argparse
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+    sys.argv = ["serve", "--arch", args.arch, "--batch", "4",
+                "--prompt-len", "64", "--tokens", str(args.tokens)]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

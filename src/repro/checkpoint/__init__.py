@@ -1,0 +1,3 @@
+from repro.checkpoint.msgpack_ckpt import save_pytree, load_pytree, save_trainer, load_trainer
+
+__all__ = ["save_pytree", "load_pytree", "save_trainer", "load_trainer"]

@@ -1,0 +1,107 @@
+"""Msgpack + zstd pytree checkpointing (no orbax/flax offline).
+
+Pytrees of jnp/np arrays, python scalars, dicts/lists/tuples and NamedTuples
+round-trip. Arrays are stored as (dtype, shape, raw bytes). Layout is a
+single ``.ckpt`` file; an adjacent ``.meta.json`` carries user metadata
+(round number, config digest) for cheap inspection.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+PyTree = Any
+
+_ARRAY = "__array__"
+_NAMEDTUPLE = "__namedtuple__"
+_TUPLE = "__tuple__"
+_SCALAR = "__scalar__"
+
+
+def _dtype_name(dt) -> str:
+    # ml_dtypes (bfloat16 etc.) stringify by name; numpy natives by .str
+    return dt.name if dt.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2") \
+        else dt.str
+
+
+def _dtype_from(name: str):
+    if name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+    return np.dtype(name)
+
+
+def _encode(obj):
+    if isinstance(obj, (jnp.ndarray, jax.Array)):
+        obj = np.asarray(obj)
+    if isinstance(obj, np.ndarray):
+        return {_ARRAY: True, "dtype": _dtype_name(obj.dtype),
+                "shape": list(obj.shape), "data": obj.tobytes()}
+    if isinstance(obj, (np.integer, np.floating)):
+        return {_SCALAR: True, "dtype": obj.dtype.str, "value": obj.item()}
+    if isinstance(obj, tuple) and hasattr(obj, "_fields"):  # NamedTuple
+        return {_NAMEDTUPLE: type(obj).__name__,
+                "fields": {f: _encode(v) for f, v in zip(obj._fields, obj)}}
+    if isinstance(obj, tuple):
+        return {_TUPLE: True, "items": [_encode(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_encode(v) for v in obj]
+    if isinstance(obj, dict):
+        return {str(k): _encode(v) for k, v in obj.items()}
+    return obj
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if obj.get(_ARRAY):
+            arr = np.frombuffer(obj["data"], dtype=_dtype_from(obj["dtype"]))
+            return jnp.asarray(arr.reshape(obj["shape"]))
+        if obj.get(_SCALAR):
+            return np.dtype(obj["dtype"]).type(obj["value"])
+        if _NAMEDTUPLE in obj:  # decoded as plain dict (type identity not kept)
+            return {f: _decode(v) for f, v in obj["fields"].items()}
+        if obj.get(_TUPLE):
+            return tuple(_decode(v) for v in obj["items"])
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+def save_pytree(path: str, tree: PyTree, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    packed = msgpack.packb(_encode(tree), use_bin_type=True)
+    with open(path, "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(packed))
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2, default=str)
+
+
+def load_pytree(path: str) -> PyTree:
+    with open(path, "rb") as f:
+        packed = zstandard.ZstdDecompressor().decompress(f.read())
+    return _decode(msgpack.unpackb(packed, raw=False))
+
+
+def save_trainer(path: str, trainer, extra: dict | None = None) -> None:
+    """Checkpoint a FedAvg/Astraea trainer: params + round + traffic."""
+    meta = {"round": trainer._round, "traffic_mb": trainer.comm.megabytes}
+    meta.update(extra or {})
+    save_pytree(path, {"params": trainer.params, "round": trainer._round,
+                       "traffic_bytes": trainer.comm.total_bytes}, meta)
+
+
+def load_trainer(path: str, trainer):
+    state = load_pytree(path)
+    trainer.params = state["params"]
+    trainer._round = int(state["round"])
+    trainer.comm.total_bytes = float(state["traffic_bytes"])
+    return trainer

@@ -1,0 +1,36 @@
+"""Architecture + input-shape registry.
+
+``get(arch_id)`` resolves any of the 10 assigned architectures (plus the
+paper's own CNN models via repro.models.cnn). ``reduced(cfg)`` returns the
+CPU-smoke variant (2 layers, d_model<=512, <=4 experts) of the same family.
+"""
+from repro.configs.base import (ArchConfig, INPUT_SHAPES, InputShape, reduced,
+                                input_specs, make_batch)
+from repro.configs import (grok_1_314b, internvl2_1b, qwen1_5_110b, mamba2_370m,
+                           gemma_2b, h2o_danube_1_8b, whisper_base, hymba_1_5b,
+                           granite_moe_3b_a800m, qwen3_4b)
+
+_REGISTRY = {
+    "grok-1-314b": grok_1_314b.CONFIG,
+    "internvl2-1b": internvl2_1b.CONFIG,
+    "qwen1.5-110b": qwen1_5_110b.CONFIG,
+    "mamba2-370m": mamba2_370m.CONFIG,
+    "gemma-2b": gemma_2b.CONFIG,
+    "h2o-danube-1.8b": h2o_danube_1_8b.CONFIG,
+    "whisper-base": whisper_base.CONFIG,
+    "hymba-1.5b": hymba_1_5b.CONFIG,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m.CONFIG,
+    "qwen3-4b": qwen3_4b.CONFIG,
+}
+
+ARCH_IDS = list(_REGISTRY)
+
+
+def get(arch_id: str) -> ArchConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _REGISTRY[arch_id]
+
+
+__all__ = ["ArchConfig", "INPUT_SHAPES", "InputShape", "get", "reduced",
+           "input_specs", "make_batch", "ARCH_IDS"]

@@ -1,0 +1,118 @@
+"""Shared config machinery: input shapes, ShapeDtypeStruct specs, reduction."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import ArchConfig, init_cache
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "reduced", "input_specs",
+           "make_batch"]
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduced(cfg: ArchConfig, d_model: int = 256) -> ArchConfig:
+    """The CPU smoke variant: 2 layers, d_model<=512, <=4 experts -- same family."""
+    n_heads = min(cfg.n_heads, 4) if cfg.n_heads else 0
+    kv = min(cfg.n_kv_heads, n_heads) if n_heads else 0
+    upd = dict(
+        n_layers=2, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=max(kv, 1) if n_heads else 0,
+        head_dim=64 if cfg.n_heads else None,
+        d_ff=max(cfg.d_ff // 16, 64) if not cfg.is_moe else 128,
+        vocab=512,
+        n_experts=min(cfg.n_experts, 4), top_k=min(cfg.top_k, 2),
+        moe_group=64,
+        ssm_state=min(cfg.ssm_state, 32) if cfg.ssm_state else 0,
+        ssm_heads=min(cfg.ssm_heads, 4) if cfg.ssm_heads else 0,
+        ssm_head_dim=32 if cfg.ssm_heads else cfg.ssm_head_dim,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        source_positions=64 if cfg.encoder_layers else cfg.source_positions,
+        vision_tokens=16 if cfg.vision_tokens else 0,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else None,
+        dtype="float32", remat=False,
+        name=cfg.name + "-smoke",
+    )
+    return dataclasses.replace(cfg, **upd)
+
+
+def _token_split(cfg: ArchConfig, shape: InputShape) -> tuple[int, int]:
+    """(text_tokens, modality_tokens) so that total seq == shape.seq_len."""
+    if cfg.arch_type == "vlm":
+        v = min(cfg.vision_tokens, shape.seq_len // 2)
+        return shape.seq_len - v, v
+    return shape.seq_len, 0
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this (arch, shape).
+
+    No allocation -- safe for .lower() with 512 placeholder devices.
+    """
+    B = shape.global_batch
+    i32 = jnp.int32
+    dt = cfg.np_dtype()
+    text, vis = _token_split(cfg, shape)
+    sd = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        batch = {"tokens": sd((B, text), i32), "labels": sd((B, text), i32)}
+        if cfg.arch_type == "vlm":
+            batch["vision_embeds"] = sd((B, vis, cfg.d_model), dt)
+        if cfg.arch_type == "audio":
+            batch["enc_feats"] = sd((B, cfg.source_positions, cfg.d_model), dt)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": sd((B, text), i32)}
+        if cfg.arch_type == "vlm":
+            batch["vision_embeds"] = sd((B, vis, cfg.d_model), dt)
+        if cfg.arch_type == "audio":
+            batch["enc_feats"] = sd((B, cfg.source_positions, cfg.d_model), dt)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len-deep cache
+    batch = {"tokens": sd((B, 1), i32), "positions": sd((B,), i32)}
+    if cfg.arch_type == "audio":
+        batch["enc_out"] = sd((B, cfg.source_positions, cfg.d_model), dt)
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, shape.seq_len))
+    cache = jax.tree.map(lambda x: sd(x.shape, x.dtype), cache)
+    return {"batch": batch, "cache": cache}
+
+
+def make_batch(cfg: ArchConfig, shape: InputShape, seed: int = 0) -> dict:
+    """Real (small!) arrays matching input_specs -- for smoke tests only."""
+    specs = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(seed)
+
+    def realize(path_spec):
+        if jnp.issubdtype(path_spec.dtype, jnp.integer):
+            return jnp.zeros(path_spec.shape, path_spec.dtype)
+        return jnp.ones(path_spec.shape, path_spec.dtype) * 0.01
+
+    out = jax.tree.map(realize, specs)
+    if "batch" in out and "tokens" in out["batch"]:
+        tok = jax.random.randint(key, out["batch"]["tokens"].shape, 0, cfg.vocab)
+        out["batch"]["tokens"] = tok.astype(jnp.int32)
+        if "labels" in out["batch"]:
+            out["batch"]["labels"] = tok.astype(jnp.int32)
+    return out

@@ -1,0 +1,15 @@
+"""granite-moe-3b-a800m [moe] -- 32L d_model=1536 24H (GQA kv=8) d_ff=512
+vocab=49155, MoE 40 experts top-8. (The assignment line also mentions
+"32 experts"; we follow the structured spec "MoE 40e top-8".)
+[hf:ibm-granite/granite-3.0-1b-a400m-base family]"""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m", arch_type="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab=49155,
+    n_experts=40, top_k=8,
+    tie_embeddings=True,
+    moe_token_parallel=True,   # §Perf H3b: replicated 512-wide experts,
+                               # token groups sharded over (data, model)
+)

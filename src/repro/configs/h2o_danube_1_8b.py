@@ -1,0 +1,11 @@
+"""h2o-danube-1.8b [dense] -- 24L d_model=2560 32H (GQA kv=8) d_ff=6912
+vocab=32000; llama+mistral mix with sliding-window attention (window 4096)
+-> sub-quadratic decode, runs long_500k. [arXiv:2401.16818]"""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-1.8b", arch_type="dense",
+    n_layers=24, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=80,
+    d_ff=6912, vocab=32000,
+    sliding_window=4096,
+)

@@ -1,0 +1,14 @@
+"""hymba-1.5b [hybrid] -- 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16; parallel attention + mamba heads per layer,
+sliding-window attention (1024) on the attention path -> sub-quadratic,
+runs long_500k. Meta-tokens from the paper are omitted (noted in
+DESIGN.md). [arXiv:2411.13676]"""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b", arch_type="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, head_dim=64,
+    d_ff=5504, vocab=32001,
+    ssm_state=16, ssm_heads=25, ssm_head_dim=64, ssm_chunk=64,
+    sliding_window=1024,
+)

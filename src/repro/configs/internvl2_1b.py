@@ -1,0 +1,15 @@
+"""internvl2-1b [vlm] -- 24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655; InternViT vision frontend is a STUB (patch embeddings are
+inputs, per the brief); LM backbone is the Qwen2-0.5B-style decoder
+(QKV bias, tied embeddings). [arXiv:2404.16821]"""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-1b", arch_type="vlm",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, head_dim=64,
+    d_ff=4864, vocab=151655,
+    qkv_bias=True, tie_embeddings=True,
+    vision_tokens=256,            # stub ViT patch embeddings per image
+    blockwise_train=False,   # §Perf H9: dense 4k-train scores fit; blockwise streaming was a measured -20%
+    rope_theta=1e6,
+)

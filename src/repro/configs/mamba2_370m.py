@@ -1,0 +1,12 @@
+"""mamba2-370m [ssm] -- 48L d_model=1024, attention-free, vocab=50280,
+ssm_state=128 (SSD, state-space duality). headdim=64, expand=2 ->
+d_inner=2048, 32 SSD heads, ngroups=1, chunk=64. [arXiv:2405.21060]"""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-370m", arch_type="ssm",
+    n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=50280,
+    ssm_state=128, ssm_heads=32, ssm_head_dim=64, ssm_chunk=64,
+    tie_embeddings=True,
+)

@@ -1,0 +1,11 @@
+"""qwen3-4b [dense] -- 36L d_model=2560 32H (GQA kv=8) d_ff=9728
+vocab=151936, qk_norm, head_dim=128. [hf:Qwen/Qwen3-8B family]"""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-4b", arch_type="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=9728, vocab=151936,
+    qk_norm=True, tie_embeddings=True,
+    rope_theta=1e6,
+)

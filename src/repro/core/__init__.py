@@ -1,0 +1,8 @@
+"""Astraea core: the paper's contribution as composable JAX modules."""
+from repro.core import distribution, augmentation, scheduling, fl, comm
+from repro.core.astraea import AstraeaTrainer
+from repro.core.fedavg import FedAvgTrainer
+from repro.core.fl import LocalSpec
+
+__all__ = ["distribution", "augmentation", "scheduling", "fl", "comm",
+           "AstraeaTrainer", "FedAvgTrainer", "LocalSpec"]

@@ -1,0 +1,42 @@
+"""Communication-traffic accounting (paper §IV-C).
+
+FedAvg: each communication round moves the model down to and back up from
+every selected client: ``2 c |w|``.
+
+Astraea: mediators sit on the FL/MEC server, so the *WAN* traffic per
+synchronization round is model down/up per online client per mediator epoch
+plus server<->mediator exchange: ``2 |w| (ceil(c / gamma) + c)`` with the
+client leg repeated ``E_m`` times when E_m > 1 (the paper's Table III varies
+E_m at fixed formula; we account the client leg per mediator epoch, which
+reproduces the Med1..Med4 ordering).
+
+``|w|`` is parameter count x 4 bytes (fp32, as in the paper's TF models).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+import math
+
+
+@dataclass
+class CommMeter:
+    num_params: int
+    bytes_per_param: int = 4
+    total_bytes: float = 0.0
+
+    @property
+    def model_bytes(self) -> float:
+        return self.num_params * self.bytes_per_param
+
+    @property
+    def megabytes(self) -> float:
+        return self.total_bytes / 2 ** 20
+
+    def fedavg_round(self, c: int) -> None:
+        self.total_bytes += 2 * c * self.model_bytes
+
+    def astraea_round(self, c: int, gamma: int, mediator_epochs: int = 1) -> None:
+        num_mediators = math.ceil(c / gamma)
+        client_leg = 2 * c * self.model_bytes * mediator_epochs
+        server_leg = 2 * num_mediators * self.model_bytes
+        self.total_bytes += client_leg + server_leg

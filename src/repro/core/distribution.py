@@ -1,0 +1,98 @@
+"""Class-distribution statistics and Kullback-Leibler divergence.
+
+Astraea's two strategies both operate on *label distributions*:
+
+* Alg. 2 (augmentation) needs the **global** per-class sample counts
+  ``C_1..C_N`` and their mean ``C_bar``.
+* Alg. 3 (rescheduling) greedily minimizes ``D_KL(P_m + P_k || P_u)`` where
+  ``P_m`` is a mediator's accumulated label distribution, ``P_k`` a candidate
+  client's, and ``P_u`` the uniform distribution.
+
+Everything here is pure JAX so it can run jit'd on device (the FL server in
+the paper computes this centrally from the clients' reported histograms --
+clients only share *label counts*, never samples, preserving the paper's
+privacy model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+def class_histogram(labels: Array, num_classes: int, mask: Array | None = None) -> Array:
+    """Per-class sample counts of an integer label vector.
+
+    Args:
+      labels: int array ``(n,)``.
+      mask: optional bool/float array ``(n,)`` -- 0 entries are padding and
+        are excluded (client datasets are stored padded to a common length).
+
+    Returns:
+      float32 ``(num_classes,)`` counts.
+    """
+    weights = jnp.ones(labels.shape, jnp.float32) if mask is None else mask.astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    return jnp.einsum("n,nc->c", weights, onehot)
+
+
+def normalize(counts: Array) -> Array:
+    """Counts -> probability distribution (safe for all-zero rows)."""
+    total = jnp.sum(counts, axis=-1, keepdims=True)
+    return counts / jnp.maximum(total, _EPS)
+
+
+def uniform(num_classes: int) -> Array:
+    return jnp.full((num_classes,), 1.0 / num_classes, jnp.float32)
+
+
+def kl_divergence(p: Array, q: Array) -> Array:
+    """D_KL(p || q) with the 0·log(0/q) = 0 convention.
+
+    ``p`` and ``q`` are distributions over the last axis; broadcasting over
+    leading axes is supported (used to score many candidate clients at once).
+    """
+    p = jnp.asarray(p, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    ratio = jnp.log(jnp.maximum(p, _EPS)) - jnp.log(jnp.maximum(q, _EPS))
+    return jnp.sum(jnp.where(p > 0, p * ratio, 0.0), axis=-1)
+
+
+def kld_to_uniform(counts: Array) -> Array:
+    """D_KL(normalize(counts) || U). Accepts leading batch axes."""
+    num_classes = counts.shape[-1]
+    return kl_divergence(normalize(counts), uniform(num_classes))
+
+
+def merged_kld_scores(mediator_counts: Array, client_counts: Array) -> Array:
+    """Alg. 3 inner loop, vectorized: score every candidate client.
+
+    Args:
+      mediator_counts: ``(C,)`` current per-class counts held by the mediator.
+      client_counts: ``(K, C)`` per-class counts of the candidate clients.
+
+    Returns:
+      ``(K,)`` -- ``D_KL(normalize(P_m + P_k) || P_u)`` per candidate.
+    """
+    merged = mediator_counts[None, :] + client_counts
+    return kld_to_uniform(merged)
+
+
+def global_histogram(client_counts: Array) -> Array:
+    """Union distribution over all clients: sum of per-client counts."""
+    return jnp.sum(client_counts, axis=0)
+
+
+def imbalance_summary(client_counts: Array) -> dict[str, Array]:
+    """Diagnostics used by EXPERIMENTS.md: the three imbalance types."""
+    sizes = jnp.sum(client_counts, axis=-1)                      # scalar imbalance
+    local_kld = kld_to_uniform(client_counts)                    # local imbalance
+    global_kld = kld_to_uniform(global_histogram(client_counts))  # global imbalance
+    return {
+        "size_cv": jnp.std(sizes) / jnp.maximum(jnp.mean(sizes), _EPS),
+        "local_kld_mean": jnp.mean(local_kld),
+        "global_kld": global_kld,
+    }

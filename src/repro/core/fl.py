@@ -1,0 +1,140 @@
+"""Shared federated-learning machinery: jit'd local client training.
+
+A *client update* is E epochs of mini-batch training (the paper uses Adam,
+lr=1e-3 on EMNIST; SGD on CINIC) on the client's local (padded, masked)
+dataset, starting from supplied weights. It is the unit both FedAvg
+(clients in parallel from the same start weights) and Astraea mediators
+(clients sequentially, each from the previous client's weights) compose.
+
+All shapes are static: client datasets are padded to a common length that
+is a multiple of the batch size, with a 0/1 sample mask excluded from the
+loss. Dummy (all-padding) clients are exact no-ops -- masked loss is 0, so
+gradients and hence Adam updates vanish -- which is what lets mediators be
+padded to a fixed gamma and vmapped.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn import Model, cross_entropy_loss
+from repro.optim.optimizers import Optimizer, apply_updates
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class LocalSpec:
+    """Static local-training hyperparameters (paper TABLE II: B, E)."""
+    batch_size: int
+    epochs: int
+
+
+def _loss_fn(model: Model, params: PyTree, x: Array, y: Array, mask: Array,
+             key: Array) -> Array:
+    logits = model.apply(params, x, train=True, rngs=key)
+    return cross_entropy_loss(logits, y, mask)
+
+
+def make_client_update(model: Model, opt: Optimizer, spec: LocalSpec,
+                       loss_fn: Callable | None = None
+                       ) -> Callable[[PyTree, Array, Array, Array, Array], PyTree]:
+    """Build the jit-able client-update function.
+
+    Returns ``client_update(params, x, y, mask, key) -> params`` running
+    ``spec.epochs`` epochs of mini-batch steps over the padded local data.
+    ``loss_fn(model, params, x, y, mask, key)`` defaults to masked CE
+    (cost-sensitive variants pass their own -- core.reweighting).
+    """
+    grad_fn = jax.grad(partial(loss_fn or _loss_fn, model))
+
+    def client_update(params: PyTree, x: Array, y: Array, mask: Array,
+                      key: Array) -> PyTree:
+        n_pad = x.shape[0]
+        bsz = spec.batch_size
+        assert n_pad % bsz == 0, "pad client data to a multiple of batch_size"
+        nb = n_pad // bsz
+        opt_state = opt.init(params)
+
+        def epoch_body(carry, ekey):
+            params, opt_state = carry
+            perm_key, *step_keys = jax.random.split(ekey, nb + 1)
+            perm = jax.random.permutation(perm_key, n_pad)
+            xs = x[perm].reshape(nb, bsz, *x.shape[1:])
+            ys = y[perm].reshape(nb, bsz)
+            ms = mask[perm].reshape(nb, bsz)
+
+            def step_body(carry, batch):
+                params, opt_state = carry
+                bx, by, bm, bkey = batch
+                grads = grad_fn(params, bx, by, bm, bkey)
+                updates, opt_state = opt.update(grads, opt_state, params)
+                return (apply_updates(params, updates), opt_state), None
+
+            (params, opt_state), _ = jax.lax.scan(
+                step_body, (params, opt_state), (xs, ys, ms, jnp.stack(step_keys)))
+            return (params, opt_state), None
+
+        ekeys = jax.random.split(key, spec.epochs)
+        (params, _), _ = jax.lax.scan(epoch_body, (params, opt_state), ekeys)
+        return params
+
+    return client_update
+
+
+def weighted_average(trees: PyTree, weights: Array) -> PyTree:
+    """FedAvg Eq. 6: sum_k (n_k / n) tree_k over a stacked-leading-axis pytree."""
+    wnorm = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+
+    def avg(leaf):
+        return jnp.tensordot(wnorm, leaf, axes=1).astype(leaf.dtype)
+
+    return jax.tree.map(avg, trees)
+
+
+def confusion_matrix(model: Model, params: PyTree, x, y, num_classes: int,
+                     batch_size: int = 512):
+    """Paper Fig. 1(b)/(c): row-normalized confusion matrix + per-class
+    recall -- under global imbalance the minority-class rows go grey."""
+    import numpy as np
+
+    @jax.jit
+    def preds(params, bx):
+        return jnp.argmax(model.apply(params, bx, train=False), -1)
+
+    cm = np.zeros((num_classes, num_classes), np.int64)
+    n = x.shape[0]
+    for start in range(0, n, batch_size):
+        p = np.asarray(preds(params, jnp.asarray(x[start:start + batch_size])))
+        t = np.asarray(y[start:start + batch_size])
+        np.add.at(cm, (t, p), 1)
+    recall = cm.diagonal() / np.maximum(cm.sum(axis=1), 1)
+    return cm, recall
+
+
+def evaluate(model: Model, params: PyTree, x: Array, y: Array,
+             batch_size: int = 512) -> dict[str, float]:
+    """Top-1 accuracy + loss on a (balanced) test set."""
+    n = x.shape[0]
+    correct, loss_sum = 0.0, 0.0
+
+    @jax.jit
+    def batch_stats(params, bx, by):
+        logits = model.apply(params, bx, train=False)
+        acc = jnp.sum((jnp.argmax(logits, -1) == by).astype(jnp.float32))
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, by[:, None], axis=-1).sum()
+        return acc, nll
+
+    for start in range(0, n, batch_size):
+        bx = x[start:start + batch_size]
+        by = y[start:start + batch_size]
+        acc, nll = batch_stats(params, jnp.asarray(bx), jnp.asarray(by))
+        correct += float(acc)
+        loss_sum += float(nll)
+    return {"accuracy": correct / n, "loss": loss_sum / n}

@@ -1,0 +1,50 @@
+"""Mediator update (Alg. 1, MediatorUpdate) as a jit'd scan.
+
+Within one mediator the assigned clients train **sequentially** -- client
+i+1 starts from client i's weights (the paper's "asynchronous SGD") -- for
+``E_m`` mediator epochs; the mediator returns the weight *delta* relative
+to the weights it received. Mediators themselves are vmapped by the server.
+
+Mediators are padded to exactly ``gamma`` client slots; empty slots carry
+all-zero masks and are provably no-ops (see core.fl docstring).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fl import LocalSpec, make_client_update
+from repro.models.cnn import Model
+from repro.optim.optimizers import Optimizer
+
+Array = jax.Array
+PyTree = Any
+
+
+def make_mediator_update(model: Model, opt: Optimizer, local: LocalSpec,
+                         mediator_epochs: int) -> Callable:
+    """Returns ``mediator_update(params, xs, ys, masks, key) -> delta`` where
+    ``xs/ys/masks`` carry a leading ``gamma`` client axis."""
+    client_update = make_client_update(model, opt, local)
+
+    def mediator_update(params: PyTree, xs: Array, ys: Array, masks: Array,
+                        key: Array) -> PyTree:
+        start = params
+
+        def client_body(w, inputs):
+            x, y, m, k = inputs
+            return client_update(w, x, y, m, k), None
+
+        def epoch_body(w, ekey):
+            gamma = xs.shape[0]
+            keys = jax.random.split(ekey, gamma)
+            w, _ = jax.lax.scan(client_body, w, (xs, ys, masks, keys))
+            return w, None
+
+        ekeys = jax.random.split(key, mediator_epochs)
+        w, _ = jax.lax.scan(epoch_body, params, ekeys)
+        return jax.tree.map(lambda a, b: a - b, w, start)
+
+    return mediator_update

@@ -1,0 +1,70 @@
+"""Cost-sensitive reweighting baseline (ablation partner for Astraea).
+
+The paper's related work (§II-A) dismisses classical imbalanced-learning
+remedies (SMOTE-style oversampling, boosting) as unsuitable for FL because
+client data is private and distributed. One remedy it does NOT evaluate is
+*loss reweighting*: the server knows the global label histogram (clients
+already report it in the initialization phase), so it can broadcast
+inverse-frequency class weights for the local loss -- zero extra
+communication, zero extra storage.
+
+We implement it as a drop-in FedAvg variant so EXPERIMENTS.md can compare:
+  FedAvg < FedAvg+reweight < Astraea(aug) < Astraea(aug+mediators)
+(the expected ordering: reweighting rebalances gradients but, unlike
+Alg. 2, adds no new minority-class *information*, and unlike Alg. 3 leaves
+local/client imbalance untouched).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fedavg import FedAvgTrainer
+from repro.core import fl as _fl
+from repro.models.cnn import Model
+
+
+def inverse_frequency_weights(global_counts: np.ndarray, *,
+                              smoothing: float = 1.0,
+                              normalize: bool = True) -> np.ndarray:
+    """w_c = (n / C) / (count_c + smoothing), normalized to mean 1."""
+    counts = np.asarray(global_counts, np.float64)
+    w = (counts.sum() / len(counts)) / (counts + smoothing)
+    if normalize:
+        w = w * len(w) / w.sum()
+    return w.astype(np.float32)
+
+
+def weighted_cross_entropy(class_weights: jnp.ndarray):
+    """Loss factory: per-sample weights looked up from the label."""
+
+    def loss(logits, labels, mask=None):
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        w = class_weights[labels]
+        if mask is not None:
+            w = w * mask
+        return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1e-6)
+
+    return loss
+
+
+@dataclass
+class ReweightedFedAvgTrainer(FedAvgTrainer):
+    """FedAvg whose local loss is inverse-frequency weighted by the global
+    label distribution (server-computed, broadcast once)."""
+
+    def __post_init__(self):
+        counts = self.data.client_counts().sum(0)
+        weights = jnp.asarray(inverse_frequency_weights(counts))
+        wce = weighted_cross_entropy(weights)
+
+        def loss_fn(model, params, x, y, mask, key):
+            logits = model.apply(params, x, train=True, rngs=key)
+            return wce(logits, y, mask)
+
+        self.loss_fn = loss_fn
+        super().__post_init__()

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: batched KLD-to-uniform scoring (paper Alg. 3 line 7).
+
+The greedy rescheduler evaluates, for one mediator histogram P_m and every
+unassigned client histogram P_k, ``D_KL(normalize(P_m + P_k) || U)``. With
+K clients and C classes this is a (K, C) sweep repeated O(c^2) times per
+scheduling pass; the kernel fuses merge + normalize + xlogx + reduce in one
+VMEM pass over (BLOCK_K, C) tiles.
+
+D_KL(p || U) = sum_i p_i * (log p_i + log C); 0*log0 := 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 256
+
+
+def _kernel(m_ref, c_ref, o_ref, *, log_c: float):
+    med = m_ref[...].astype(jnp.float32)                # (1, C)
+    cli = c_ref[...].astype(jnp.float32)                # (BLOCK_K, C)
+    merged = med + cli
+    total = jnp.maximum(jnp.sum(merged, axis=-1, keepdims=True), 1e-12)
+    p = merged / total
+    terms = jnp.where(p > 0, p * (jnp.log(jnp.maximum(p, 1e-12)) + log_c), 0.0)
+    o_ref[...] = jnp.sum(terms, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def kld_score(mediator_counts: jax.Array, client_counts: jax.Array, *,
+              block_k: int = DEFAULT_BLOCK_K, interpret: bool = True) -> jax.Array:
+    """mediator_counts: (C,); client_counts: (K, C). Returns (K,) fp32."""
+    k, c = client_counts.shape
+    pad = (-k) % block_k
+    if pad:
+        client_counts = jnp.pad(client_counts, ((0, pad), (0, 0)))
+    kp = client_counts.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_kernel, log_c=float(np.log(c))),
+        grid=(kp // block_k,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((block_k, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_k,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((kp,), jnp.float32),
+        interpret=interpret,
+    )(mediator_counts[None, :], client_counts)
+    return out[:k]

@@ -1,0 +1,73 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode --
+the kernel body runs in Python with identical semantics; on a real TPU the
+same calls compile through Mosaic. ``interpret`` auto-detects the backend.
+
+``fedavg_agg_tree`` applies the aggregation kernel to whole parameter
+pytrees (the FL server path); ``flash_attention`` accepts model-layout
+(b, s, h, d) tensors with GQA kv heads and handles the repeat + transpose.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fedavg_agg as _fa
+from repro.kernels import flash_attention as _fl
+from repro.kernels import kld_score as _kl
+from repro.kernels import ssd_chunk as _sc
+
+PyTree = Any
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fedavg_agg(deltas: jax.Array, weights: jax.Array, **kw) -> jax.Array:
+    """deltas (M, N) + sizes (M,) -> weighted average (N,)."""
+    kw.setdefault("interpret", _interpret())
+    return _fa.fedavg_agg(deltas, weights, **kw)
+
+
+def fedavg_agg_tree(deltas_tree: PyTree, weights: jax.Array, **kw) -> PyTree:
+    """Apply Eq. 6 leafwise to a stacked (M, ...) parameter pytree."""
+    def leaf(d):
+        m = d.shape[0]
+        flat = d.reshape(m, -1)
+        return fedavg_agg(flat, weights, **kw).reshape(d.shape[1:])
+    return jax.tree.map(leaf, deltas_tree)
+
+
+def kld_score(mediator_counts: jax.Array, client_counts: jax.Array, **kw) -> jax.Array:
+    kw.setdefault("interpret", _interpret())
+    return _kl.kld_score(mediator_counts, client_counts, **kw)
+
+
+def ssd_chunk(x, dt, A, B, C, **kw):
+    """Fused Mamba-2 intra-chunk block: see kernels/ssd_chunk.py."""
+    kw.setdefault("interpret", _interpret())
+    return _sc.ssd_chunk(x, dt, A, B, C, **kw)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    q_offset: int = 0, **kw) -> jax.Array:
+    """Model layout: q (b, s, H, d); k, v (b, s, KV, d). Returns (b, s, H, d)."""
+    kw.setdefault("interpret", _interpret())
+    n_rep = q.shape[2] // k.shape[2]
+    if n_rep > 1:
+        b, s, kv, hd = k.shape
+        k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)
+                             ).reshape(b, s, kv * n_rep, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (b, s, kv, n_rep, hd)
+                             ).reshape(b, s, kv * n_rep, hd)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fl.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              q_offset=q_offset, **kw)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def fedavg_agg(deltas: Array, weights: Array) -> Array:
+    """Eq. 6: out[n] = sum_m (w_m / sum w) * deltas[m, n].  fp32 accumulate."""
+    w = weights.astype(jnp.float32)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    return jnp.einsum("m,mn->n", wn, deltas.astype(jnp.float32)).astype(deltas.dtype)
+
+
+def kld_score(mediator_counts: Array, client_counts: Array) -> Array:
+    """Alg. 3 scores: D_KL(normalize(P_m + P_k) || U) for each candidate k."""
+    merged = mediator_counts[None, :].astype(jnp.float32) + client_counts.astype(jnp.float32)
+    total = jnp.maximum(merged.sum(-1, keepdims=True), 1e-12)
+    p = merged / total
+    c = merged.shape[-1]
+    terms = jnp.where(p > 0, p * (jnp.log(jnp.maximum(p, 1e-12)) + np.log(c)), 0.0)
+    return terms.sum(-1)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int | None = None, q_offset: int = 0) -> Array:
+    """Reference attention. q,k,v: (b, h, s, d) (kernel layout). fp32 softmax."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def ssd_chunk(x, dt, A, B, C):
+    """Oracle for the fused intra-chunk SSD kernel (pure jnp, fp32).
+
+    x (b,nc,L,h,p); dt (b,nc,L,h); A (h,); B,C (b,nc,L,n).
+    Returns (y_diag, S_chunk (b,nc,h,n,p), g (b,nc,h)).
+    """
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    dtf = dt.astype(f32)
+    Af = A.astype(f32)
+    Bf = B.astype(f32)
+    Cf = C.astype(f32)
+    dA = dtf * Af                                       # (b,nc,L,h)
+    cum = jnp.cumsum(dA, axis=2)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,L,L,h)
+    L = x.shape[2]
+    tril = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tril[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)
+    dx = dtf[..., None] * xf
+    y = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, decay, dx)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    S = jnp.einsum("bcln,bclh,bclhp->bchnp", Bf, decay_to_end * dtf, xf)
+    g = jnp.exp(cum[:, :, -1, :])
+    return y.astype(x.dtype), S, g

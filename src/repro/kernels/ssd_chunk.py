@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk block (arXiv:2405.21060).
+
+The chunked SSD algorithm (models/ssm.py) spends its FLOPs in the
+per-chunk, per-head computation:
+
+    dA        = dt * A[h]                      (L,)
+    seg(i,j)  = sum dA[j+1..i]  (tril)         (L, L)
+    y_diag    = (C B^T  o  exp(seg)) (dt * x)  (L, p)
+    S_chunk   = (B * dt * decay_to_end)^T x    (n, p)   outgoing state
+    g_chunk   = exp(sum dA)                    ()       chunk decay
+
+which is matmul-rich and embarrassingly parallel over (batch, chunk,
+head) -- exactly one VMEM tile each. This kernel fuses the whole block:
+the (L, L) decay matrix never leaves VMEM, scores/decay/masking fuse into
+the two MXU matmuls. The sequential inter-chunk recurrence (a tiny
+(h, p, n) state update) stays in XLA (lax.scan), as does y_off.
+
+Tile shapes: L (chunk) = 64..128, p (head dim) = 64, n (state) = 128 --
+all MXU-aligned for mamba2-370m. fp32 accumulation throughout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, g_ref):
+    # blocks: x (L, p); dt (L,); a (1,); b, c (L, n)
+    x = x_ref[...].astype(jnp.float32)
+    dt = dt_ref[...].astype(jnp.float32)                    # (L,)
+    a = a_ref[0].astype(jnp.float32)                        # scalar
+    B = b_ref[...].astype(jnp.float32)                      # (L, n)
+    C = c_ref[...].astype(jnp.float32)
+
+    L = x.shape[0]
+    dA = dt * a                                             # (L,)
+    cum = jnp.cumsum(dA)                                    # (L,)
+    seg = cum[:, None] - cum[None, :]                       # (L, L) sum (j, i]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(tril, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (L, L)
+    dx = dt[:, None] * x                                    # (L, p)
+    y = jax.lax.dot_general(scores * decay, dx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # (L, p)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)                   # (L,)
+    w = (decay_to_end * dt)[:, None] * B                    # (L, n)
+    S = jax.lax.dot_general(w, x, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # (n, p)
+
+    y_ref[...] = y.astype(y_ref.dtype)
+    s_ref[...] = S.astype(s_ref.dtype)
+    g_ref[...] = jnp.exp(cum[-1]).astype(g_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+              C: jax.Array, *, interpret: bool = True):
+    """Fused intra-chunk SSD for all (batch, chunk, head) tiles.
+
+    Args:
+      x:  (b, nc, L, h, p)  pre-activation inputs per head.
+      dt: (b, nc, L, h)     positive step sizes.
+      A:  (h,)              negative decay rates.
+      B, C: (b, nc, L, n)   shared across heads (ngroups=1).
+
+    Returns:
+      y_diag: (b, nc, L, h, p), S_chunk: (b, nc, h, n, p), g: (b, nc, h).
+    """
+    b, nc, L, h, p = x.shape
+    n = B.shape[-1]
+
+    grid = (b, nc, h)
+    y, S, g = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, L, None, p),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((None, None, L, None), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1,), lambda bi, ci, hi: (hi,)),
+            pl.BlockSpec((None, None, L, n), lambda bi, ci, hi: (bi, ci, 0, 0)),
+            pl.BlockSpec((None, None, L, n), lambda bi, ci, hi: (bi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, L, None, p),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((None, None, None, n, p),
+                         lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+            pl.BlockSpec((None, None, None), lambda bi, ci, hi: (bi, ci, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, L, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, nc, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, S, g
+
+

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices. Only
+this entry point sets the flag -- tests and benches see 1 CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch grok-1-314b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all                 # single-pod 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod     # 2x16x16
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.configs.base import INPUT_SHAPES, input_specs
+from repro.launch import sharding as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_train_step, make_prefill_step,
+                                make_serve_step, suggest_microbatches)
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.layers import set_activation_mesh, set_param_cot_specs
+from repro.optim import adam
+from repro.roofline import parse_hlo_costs, roofline_from_costs, model_flops
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "single16x16"
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention architecture without a sliding-window/SSM "
+                "variant: 524k dense decode is intentionally N/A (DESIGN.md)")
+    return None
+
+
+def build_fl_lowerable(cfg, shape, mesh):
+    """Astraea synchronization round (make_fl_round) on the mesh: the
+    paper's technique as ONE XLA program. Params are model-sharded only
+    (each mediator slice holds a replica); batch rows are mediator client
+    streams. Lowered for train_4k-style shapes."""
+    from repro.launch.steps import make_fl_round
+    import dataclasses as _dc
+    # jax.checkpoint inside a partial-auto shard_map trips an XLA
+    # "Invalid binary instruction opcode copy" crash (b/433785288-adjacent);
+    # the FL round scans microbatches anyway, so disable remat here.
+    cfg = _dc.replace(cfg, remat=False)
+    specs = T.param_specs(cfg, max_seq=shape.seq_len)
+    p_structs = L.shape_dtype(specs)
+    # model-sharded only: strip data axes from the train rules
+    rules = {k: [a for a in v if a == "model"] for k, v in S.TRAIN_RULES.items()}
+    p_shards = S.param_shardings(specs, mesh, rules)
+    spec_tree = jax.tree.map(lambda ns: ns.spec, p_shards)
+    B, Ssz = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    args = (p_structs,
+            jax.ShapeDtypeStruct((B, Ssz), i32),
+            jax.ShapeDtypeStruct((B, Ssz), i32),
+            jax.ShapeDtypeStruct((B,), jnp.float32))
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    bsh = NamedSharding(mesh, P(daxes))
+    wsh = NamedSharding(mesh, P(daxes))
+    dp = int(np.prod([mesh.shape[a] for a in daxes]))
+    fn = make_fl_round(cfg, mesh, spec_tree, local_steps=max(B // dp, 1),
+                       mediator_epochs=1)
+    return (fn, args, (p_shards, bsh, bsh, wsh), p_shards, (0,))
+
+
+def build_lowerable(cfg, shape, mesh):
+    """Returns (fn, args, in_shardings, out_shardings, donate)."""
+    specs = param_specs = T.param_specs(cfg, max_seq=max(shape.seq_len, 4096))
+    p_structs = L.shape_dtype(specs)
+    p_shards = S.param_shardings(specs, mesh, S.TRAIN_RULES)
+    ins = input_specs(cfg, shape)
+    b_shards = S.batch_shardings(ins["batch"], mesh)
+
+    if shape.kind == "train":
+        moment_dtype = jnp.bfloat16 if T.param_count(cfg) > 10e9 else None
+        opt = adam(1e-4, moment_dtype=moment_dtype)
+        o_structs = jax.eval_shape(opt.init, p_structs)
+        o_shards = S.opt_state_shardings(opt.init, p_shards, p_structs, mesh)
+        mb = suggest_microbatches(cfg, shape.global_batch, shape.seq_len, mesh)
+        fn = make_train_step(cfg, opt, microbatches=mb, grad_shardings=p_shards)
+        return (fn, (p_structs, o_structs, ins["batch"]),
+                (p_shards, o_shards, b_shards),
+                (p_shards, o_shards, S.replicated(mesh)), (0, 1))
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        cache_struct = jax.eval_shape(
+            lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+        c_shards = S.cache_shardings(cache_struct, mesh)
+        tok_shard = S.batch_shardings(
+            {"t": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}, mesh)["t"]
+        return (fn, (p_structs, ins["batch"]), (p_shards, b_shards),
+                (tok_shard, c_shards), ())
+
+    # decode
+    fn = make_serve_step(cfg)
+    c_shards = S.cache_shardings(ins["cache"], mesh)
+    tok_shard = S.batch_shardings(
+        {"t": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}, mesh)["t"]
+    return (fn, (p_structs, ins["batch"], ins["cache"]),
+            (p_shards, b_shards, c_shards), (tok_shard, c_shards), (2,))
+
+
+def run_one(arch_id: str, shape_name: str, multi_pod: bool,
+            save_hlo: bool = False, out_dir: str = OUT_DIR,
+            rules=None, tag: str = "", fl_round: bool = False) -> dict:
+    cfg = C.get(arch_id)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_nm = _mesh_name(multi_pod)
+    rec: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_nm,
+                 "kind": "fl_round" if fl_round else shape.kind, "tag": tag,
+                 "params_total": T.param_count(cfg),
+                 "params_active": T.active_param_count(cfg)}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    if rules is not None:
+        orig_rules = S.TRAIN_RULES.copy()
+        S.TRAIN_RULES.clear()
+        S.TRAIN_RULES.update(rules)
+    try:
+        from repro.models.layers import ACT_RULES
+        orig_moe_tokens = ACT_RULES["moe_tokens"]
+        if cfg.moe_token_parallel and rules is None:
+            rules = dict(S.TRAIN_RULES)
+            rules["mlp"] = []
+            ACT_RULES["moe_tokens"] = ("pod", "data", "model")
+            orig_rules = S.TRAIN_RULES.copy()
+            S.TRAIN_RULES.clear()
+            S.TRAIN_RULES.update(rules)
+        if fl_round:
+            fn, args, in_sh, out_sh, donate = build_fl_lowerable(cfg, shape, mesh)
+            set_activation_mesh(None)   # constraints inside shard_map trip XLA
+        else:
+            fn, args, in_sh, out_sh, donate = build_lowerable(cfg, shape, mesh)
+            set_activation_mesh(mesh)
+        if shape.kind == "train" and not fl_round:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            layer_shards = S.param_shardings(
+                T.param_specs(cfg, max_seq=max(shape.seq_len, 4096)), mesh,
+                S.TRAIN_RULES)["layers"]
+            # drop the leading stacked-layers axis of each spec
+            per_layer = jax.tree.map(
+                lambda ns: NamedSharding(mesh, P(*tuple(ns.spec)[1:])), layer_shards)
+            set_param_cot_specs(per_layer)
+        t0 = time.time()
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+    finally:
+        set_activation_mesh(None)
+        set_param_cot_specs(None)
+        ACT_RULES["moe_tokens"] = orig_moe_tokens
+        if rules is not None:
+            S.TRAIN_RULES.clear()
+            S.TRAIN_RULES.update(orig_rules)
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    costs = parse_hlo_costs(hlo_text)
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mflops = model_flops(cfg, tokens, "train" if fl_round else shape.kind) / n_chips
+    terms = roofline_from_costs(costs.flops, costs.bytes_accessed,
+                                costs.collective_bytes, mflops)
+
+    rec.update(
+        status="ok", n_chips=n_chips,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            peak_estimate_gb=round((mem.argument_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    - mem.alias_size_in_bytes) / 2**30, 3)),
+        xla_cost_analysis=dict(flops=ca.get("flops", 0.0),
+                               bytes=ca.get("bytes accessed", 0.0)),
+        hlo_costs=dict(flops=costs.flops, bytes=costs.bytes_accessed,
+                       collective_bytes=costs.collective_bytes,
+                       collective_by_kind=costs.collective_by_kind,
+                       while_trips=costs.while_trips),
+        roofline=terms.as_dict(),
+    )
+    if save_hlo:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_nm}.hlo"),
+                  "w") as f:
+            f.write(hlo_text)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = C.ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for aid in archs:
+        for snm in shapes:
+            t0 = time.time()
+            try:
+                rec = run_one(aid, snm, args.multi_pod, args.save_hlo, args.out)
+            except Exception as e:  # a failure here is a sharding bug
+                rec = {"arch": aid, "shape": snm, "mesh": _mesh_name(args.multi_pod),
+                       "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-3000:]}
+                failures += 1
+            fname = f"{aid}__{snm}__{_mesh_name(args.multi_pod)}.json"
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(rec, f, indent=2, default=float)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" dom={r['dominant']:10s} comp={r['compute_s']*1e3:9.2f}ms"
+                         f" mem={r['memory_s']*1e3:9.2f}ms coll={r['collective_s']*1e3:9.2f}ms"
+                         f" peak={rec['memory']['peak_estimate_gb']:7.2f}GB"
+                         f" compile={rec['compile_s']:6.1f}s")
+            elif status == "skipped":
+                extra = " (" + rec["skip_reason"][:60] + ")"
+            else:
+                extra = " " + rec.get("error", "")[:120]
+            print(f"[{time.time()-t0:6.1f}s] {aid:24s} {snm:12s} {status:8s}{extra}",
+                  flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

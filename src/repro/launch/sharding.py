@@ -1,0 +1,141 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, with fallbacks).
+
+Every parameter in the model zoo carries logical axis names (see
+models.layers.LogicalParam). A *rule table* maps each logical axis to an
+ordered list of candidate mesh axes; the first candidate whose size divides
+the dimension and is not already used by the same parameter wins, otherwise
+the dimension is replicated. This gives correct-by-construction
+PartitionSpecs for every architecture (e.g. internvl2's 14 heads simply
+fall back to replicated attention weights while its MLP/vocab still shard).
+
+Two standard rule sets:
+  TRAIN_RULES     -- FSDP x TP: "embed" shards over data, wide dims over model.
+  INFER_RULES     -- same (big checkpoints need weight sharding at inference
+                     too); decode caches shard batch over data.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import layers as L
+
+PyTree = Any
+
+TRAIN_RULES: dict[str, list] = {
+    "vocab": ["model"],
+    "embed": [("pod", "data"), "data"],   # FSDP/ZeRO-3 style weight sharding
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "head_dim": [],
+    "mlp": ["model"],
+    "expert": ["model"],
+    "layers": [],
+    "ssm_proj": ["model"],
+    "ssm_conv": ["model"],
+    "ssm_inner": ["model"],
+    "ssm_heads": ["model"],
+    "conv": [],
+    "pos": [],
+}
+
+INFER_RULES = dict(TRAIN_RULES)
+
+
+def spec_for(shape: tuple[int, ...], axes: tuple[str, ...], mesh: Mesh,
+             rules: dict[str, list[str]]) -> P:
+    """PartitionSpec for one parameter under the rule table."""
+    used: set[str] = set()
+    parts = []
+    for dim, logical in zip(shape, axes):
+        chosen = None
+        for cand in rules.get(logical, []):
+            cand_t = cand if isinstance(cand, tuple) else (cand,)
+            if any(a not in mesh.axis_names or a in used for a in cand_t):
+                continue
+            size = 1
+            for a in cand_t:
+                size *= mesh.shape[a]
+            if dim % size == 0 and dim >= size:
+                chosen = cand_t if len(cand_t) > 1 else cand_t[0]
+                used.update(cand_t)
+                break
+        parts.append(chosen)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(specs: PyTree, mesh: Mesh,
+                    rules: dict[str, list[str]] | None = None) -> PyTree:
+    """NamedSharding pytree for a LogicalParam spec pytree."""
+    rules = rules or TRAIN_RULES
+
+    def leaf(sp: L.LogicalParam):
+        return NamedSharding(mesh, spec_for(sp.shape, sp.axes, mesh, rules))
+
+    return jax.tree.map(leaf, specs, is_leaf=lambda x: isinstance(x, L.LogicalParam))
+
+
+def batch_shardings(batch_specs: PyTree, mesh: Mesh) -> PyTree:
+    """Shard the leading (batch) dim of every input over the data axes."""
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+
+    def leaf(sd):
+        if sd.shape and sd.shape[0] % dsize == 0 and sd.shape[0] >= dsize:
+            return NamedSharding(mesh, P(daxes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(leaf, batch_specs)
+
+
+def cache_shardings(cache_specs: PyTree, mesh: Mesh) -> PyTree:
+    """Decode caches: (layers, batch, ...) -- shard batch (axis 1) over data,
+    and the head/state axis over model when divisible."""
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    msize = mesh.shape.get("model", 1)
+
+    def leaf(sd):
+        parts: list = [None] * len(sd.shape)
+        if len(sd.shape) >= 2 and sd.shape[1] % dsize == 0 and sd.shape[1] >= dsize:
+            parts[1] = daxes
+        # kv-head axis of attention caches: (L, b, S, KV, hd) -> axis 3;
+        # ssm state (L, b, h, p, n) -> heads at axis 2
+        for ax in (3, 2):
+            if len(sd.shape) > ax + 1 and parts[ax] is None \
+                    and sd.shape[ax] % msize == 0 and sd.shape[ax] >= msize:
+                parts[ax] = "model"
+                break
+        while parts and parts[-1] is None:
+            parts.pop()
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(leaf, cache_specs)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def opt_state_shardings(opt_init, param_sds: PyTree, param_shapes: PyTree,
+                        mesh: Mesh) -> PyTree:
+    """Shardings for optimizer state: moments mirror their parameters."""
+    state_shape = jax.eval_shape(opt_init, param_shapes)
+
+    def build(tree):
+        # {"step": scalar, "adam"/"sgd": NamedTuple of param-shaped trees}
+        out = {}
+        for k, v in tree.items():
+            if k == "step":
+                out[k] = replicated(mesh)
+            else:
+                out[k] = type(v)(*[param_sds if leafs is not None else None
+                                   for leafs in v])
+        return out
+
+    return build(state_shape)

@@ -1,0 +1,69 @@
+"""CPU-runnable training driver for any assigned architecture (reduced or
+full config -- full configs only make sense under the dry-run, so the
+default is the reduced smoke variant).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.configs.base import InputShape, make_batch
+from repro.launch.steps import make_train_step
+from repro.models import transformer as T
+from repro.optim import adamw, warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full config (requires the dry-run mesh)")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = C.get(args.arch)
+    if not args.full_config:
+        cfg = C.reduced(cfg)
+    shape = InputShape("cli", args.seq, args.batch, "train")
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=args.seq)
+    n_params = sum(int(p.size) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M seq={args.seq} batch={args.batch}")
+
+    opt = adamw(warmup_cosine(args.lr, 10, max(args.steps, 20)))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    key = jax.random.PRNGKey(1)
+    t0 = time.time()
+    for step in range(args.steps):
+        key = jax.random.fold_in(key, step)
+        toks = jax.random.randint(key, (args.batch, args.seq), 0, cfg.vocab)
+        batch = make_batch(cfg, shape)["batch"]
+        batch["tokens"] = toks.astype(jnp.int32)
+        batch["labels"] = jnp.roll(toks, -1, axis=1).astype(jnp.int32)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {float(loss):8.4f}  "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+        assert np.isfinite(float(loss)), "training diverged"
+
+    if args.ckpt:
+        from repro.checkpoint import save_pytree
+        save_pytree(args.ckpt, {"params": params, "step": args.steps})
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models import cnn
+
+__all__ = ["cnn"]

@@ -1,0 +1,168 @@
+"""The paper's two CNN classifiers, as pure-JAX functional models.
+
+1. ``emnist_cnn`` -- Section II-B: three conv layers (12ch 5x5/s2, 18ch
+   3x3/s2, 24ch 2x2/s1, all VALID padding -- this is the only padding choice
+   that yields the paper's quoted 68,873 parameters for 47 classes), dropout
+   0.5 after the first two convs, dense 150 ReLU, softmax head.
+2. ``cinic_cnn`` -- the Keras-documentation CIFAR-10 CNN the paper cites:
+   [conv32, conv32, maxpool, drop .25] x [conv64, conv64, maxpool, drop .25],
+   dense 512 ReLU, drop .5, softmax head.
+
+A model is a ``Model(init, apply)`` pair:
+    params = model.init(key)
+    logits = model.apply(params, images, train=..., rngs=key)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Model:
+    init: Callable[[Array], PyTree]
+    apply: Callable[..., Array]
+    num_classes: int
+    input_shape: tuple[int, ...]
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    wkey, _ = jax.random.split(key)
+    fan_in = kh * kw * cin
+    w = jax.random.normal(wkey, (kh, kw, cin, cout), jnp.float32) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _dense_init(key, din, dout):
+    w = jax.random.normal(key, (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+    return {"w": w, "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def conv2d(p, x, stride: int = 1, padding: str = "VALID") -> Array:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def dense(p, x) -> Array:
+    return x @ p["w"] + p["b"]
+
+
+def dropout(key, x, rate: float, train: bool) -> Array:
+    if not train or rate == 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)
+
+
+def max_pool(x, window: int = 2) -> Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, window, window, 1), (1, window, window, 1), "VALID")
+
+
+def count_params(params: PyTree) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------
+# EMNIST CNN (Section II-B) -- 68,873 params at num_classes=47
+# --------------------------------------------------------------------------
+
+def emnist_cnn(num_classes: int = 47, image_size: int = 28) -> Model:
+    def shapes(h):
+        h1 = (h - 5) // 2 + 1          # conv1 5x5 s2 VALID
+        h2 = (h1 - 3) // 2 + 1         # conv2 3x3 s2 VALID
+        h3 = h2 - 2 + 1                # conv3 2x2 s1 VALID
+        return h1, h2, h3
+
+    _, _, h3 = shapes(image_size)
+    flat = h3 * h3 * 24
+
+    def init(key):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        return {
+            "conv1": _conv_init(k1, 5, 5, 1, 12),
+            "conv2": _conv_init(k2, 3, 3, 12, 18),
+            "conv3": _conv_init(k3, 2, 2, 18, 24),
+            "dense1": _dense_init(k4, flat, 150),
+            "out": _dense_init(k5, 150, num_classes),
+        }
+
+    def apply(params, x, *, train: bool = False, rngs: Array | None = None):
+        if rngs is None:
+            rngs = jax.random.PRNGKey(0)
+        d1, d2 = jax.random.split(rngs)
+        x = jax.nn.relu(conv2d(params["conv1"], x, stride=2))
+        x = dropout(d1, x, 0.5, train)
+        x = jax.nn.relu(conv2d(params["conv2"], x, stride=2))
+        x = dropout(d2, x, 0.5, train)
+        x = jax.nn.relu(conv2d(params["conv3"], x, stride=1))
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(dense(params["dense1"], x))
+        return dense(params["out"], x)
+
+    return Model(init, apply, num_classes, (image_size, image_size, 1))
+
+
+# --------------------------------------------------------------------------
+# CINIC-10 CNN (Keras CIFAR-10 example, as cited by the paper)
+# --------------------------------------------------------------------------
+
+def cinic_cnn(num_classes: int = 10, image_size: int = 32, channels: int = 3,
+              width: int = 32) -> Model:
+    """``width`` scales the channel counts (32 = paper-faithful; smaller for
+    CPU-budget experiments)."""
+    w1, w2 = width, width * 2
+    # conv 3x3 SAME, pool /2, conv 3x3 SAME, pool /2
+    h = image_size // 4
+    flat = h * h * w2
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+        return {
+            "conv1a": _conv_init(ks[0], 3, 3, channels, w1),
+            "conv1b": _conv_init(ks[1], 3, 3, w1, w1),
+            "conv2a": _conv_init(ks[2], 3, 3, w1, w2),
+            "conv2b": _conv_init(ks[3], 3, 3, w2, w2),
+            "dense1": _dense_init(ks[4], flat, 512 * width // 32),
+            "out": _dense_init(ks[5], 512 * width // 32, num_classes),
+        }
+
+    def apply(params, x, *, train: bool = False, rngs: Array | None = None):
+        if rngs is None:
+            rngs = jax.random.PRNGKey(0)
+        d1, d2, d3 = jax.random.split(rngs, 3)
+        x = jax.nn.relu(conv2d(params["conv1a"], x, padding="SAME"))
+        x = jax.nn.relu(conv2d(params["conv1b"], x, padding="SAME"))
+        x = max_pool(x)
+        x = dropout(d1, x, 0.25, train)
+        x = jax.nn.relu(conv2d(params["conv2a"], x, padding="SAME"))
+        x = jax.nn.relu(conv2d(params["conv2b"], x, padding="SAME"))
+        x = max_pool(x)
+        x = dropout(d2, x, 0.25, train)
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(dense(params["dense1"], x))
+        x = dropout(d3, x, 0.5, train)
+        return dense(params["out"], x)
+
+    return Model(init, apply, num_classes, (image_size, image_size, channels))
+
+
+def cross_entropy_loss(logits: Array, labels: Array, mask: Array | None = None) -> Array:
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1e-6)
+    return jnp.mean(nll)
+
+
+def accuracy(logits: Array, labels: Array) -> Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

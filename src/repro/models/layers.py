@@ -1,0 +1,416 @@
+"""Shared transformer/SSM layer library (pure JAX, shard-friendly).
+
+Every weight is created with a *logical axis name* tuple so the launcher can
+map logical axes -> mesh axes (repro.launch.sharding). All matmul dims that
+matter for the MXU are kept 128-aligned by the configs.
+
+Conventions:
+  activations: (batch, seq, d_model), batch sharded on ("pod","data")
+  attention:   GQA with n_kv heads; q heads grouped over kv heads
+  caches:      dict of arrays with a leading layer axis (stacked for scan)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+# --------------------------------------------------------------------------
+# Logical-axis annotated parameter construction
+# --------------------------------------------------------------------------
+
+class LogicalParam:
+    """A parameter spec: shape + logical axis names + init scale."""
+
+    def __init__(self, shape, axes, scale=None, dtype=jnp.float32):
+        assert len(shape) == len(axes), (shape, axes)
+        self.shape = tuple(int(s) for s in shape)
+        self.axes = tuple(axes)
+        self.scale = scale
+        self.dtype = dtype
+
+    def init(self, key):
+        if self.scale is None:  # fan-in
+            fan_in = self.shape[0] if len(self.shape) >= 2 else 1
+            scale = 1.0 / np.sqrt(max(fan_in, 1))
+        else:
+            scale = self.scale
+        if scale == 0.0:
+            return jnp.zeros(self.shape, self.dtype)
+        if scale == 1.0 and len(self.shape) == 1:
+            return jnp.ones(self.shape, self.dtype)
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(self.dtype)
+
+
+def build_params(key: Array, specs: PyTree) -> PyTree:
+    """Initialize a pytree of LogicalParam specs into real arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, LogicalParam))
+    keys = jax.random.split(key, len(leaves))
+    vals = [spec.init(k) for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def logical_axes(specs: PyTree) -> PyTree:
+    """Pytree of logical-axis tuples matching build_params output."""
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, LogicalParam))
+
+
+def shape_dtype(specs: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype), specs,
+        is_leaf=lambda x: isinstance(x, LogicalParam))
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints (MaxText-style logical activation axes)
+# --------------------------------------------------------------------------
+#
+# Model code calls ``constrain(x, "batch", None, "heads", None)``; when a
+# production mesh has been registered (launch.steps / launch.dryrun call
+# ``set_activation_mesh``), this lowers to with_sharding_constraint with the
+# matching mesh axes -- dims that don't divide are silently left unsharded,
+# and on the 1-device CPU simulator it is a no-op.
+
+_ACT_MESH = None
+_MANUAL_AXES: frozenset = frozenset()
+ACT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "moe_tokens": ("pod", "data"),   # H3b: += "model" for replicated-expert MoE
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "seq": (),        # sequence stays unsharded for compute (baseline)
+    "seq_res": ("model",),  # saved residual stream: sequence-parallel (Megatron SP)
+    "embed": (),
+}
+
+
+def set_activation_mesh(mesh) -> None:
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def set_manual_axes(axes) -> None:
+    """Axes handled manually by an enclosing shard_map (e.g. the mediator
+    axes in make_fl_round) -- constrain() must not mention them."""
+    global _MANUAL_AXES
+    _MANUAL_AXES = frozenset(axes)
+
+
+# Per-layer parameter shardings for cotangent pinning (§Perf H2). Without
+# this, the weight gradients produced inside the backward layer-scan are
+# materialized REPLICATED in f32 and all-reduced once per (layer x
+# microbatch) -- the dominant collective of the training baseline. A
+# custom_vjp identity applied to the sliced layer params constrains each
+# layer's weight cotangent to the parameter sharding, so XLA emits a
+# reduce-scatter into the sharded gradient stack instead.
+
+_PARAM_COT_SPECS = None
+
+
+def set_param_cot_specs(tree) -> None:
+    global _PARAM_COT_SPECS
+    _PARAM_COT_SPECS = tree
+
+
+def get_param_cot_specs():
+    return _PARAM_COT_SPECS
+
+
+def pin_cotangent(x, sharding):
+    """Identity whose backward constrains the cotangent's sharding."""
+
+    @jax.custom_vjp
+    def f(y):
+        return y
+
+    def fwd(y):
+        return y, None
+
+    def bwd(_, g):
+        return (jax.lax.with_sharding_constraint(g, sharding),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
+
+
+def constrain(x: "Array", *logical: str | None) -> "Array":
+    """Dim names: a logical activation axis from ACT_RULES, or
+    ``None`` -> leave unconstrained (UNCONSTRAINED, compiler's choice), or
+    ``"full"`` -> force replicated (used where a gather is intended)."""
+    mesh = _ACT_MESH
+    if mesh is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    U = P.UNCONSTRAINED
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(x.shape, logical):
+        if name is None:
+            parts.append(U)
+            continue
+        if name == "full":
+            parts.append(None)
+            continue
+        axes = [a for a in ACT_RULES.get(name, ())
+                if a in mesh.axis_names and a not in used
+                and a not in _MANUAL_AXES]
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and dim % size == 0 and dim >= size:
+            parts.append(tuple(axes) if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            parts.append(U)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+
+# --------------------------------------------------------------------------
+# Norms / activations
+# --------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    out = (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 1e4) -> Array:
+    """x: (..., seq, n_heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                         # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                      # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (full / causal / sliding-window / decode-with-cache)
+# --------------------------------------------------------------------------
+
+def _repeat_kv(k: Array, n_rep: int) -> Array:
+    """(b, s, kv, hd) -> (b, s, kv * n_rep, hd)"""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(b, s, kv * n_rep, hd)
+
+
+def attention_scores(q: Array, k: Array, v: Array, *, causal: bool,
+                     window: int | None = None,
+                     q_offset: int | Array = 0) -> Array:
+    """Reference (non-flash) attention.
+
+    q: (b, sq, h, hd); k, v: (b, skv, h, hd). ``q_offset`` is the absolute
+    position of q[0] relative to k[0] (for decode: cache_len - 1).
+    Returns (b, sq, h, hd). fp32 softmax.
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# Blockwise (flash-style) attention in pure XLA: the (S, S) score matrix is
+# never materialized -- a lax.scan streams KV blocks with an online softmax
+# (running max m, denominator l, f32 accumulator), each block body
+# checkpointed so the backward recomputes block scores instead of storing
+# them. This is the §Perf H4 optimization; on real TPUs the same scheme is
+# the Pallas kernel (repro.kernels.flash_attention) -- this is its XLA
+# lowering for dry-runs and CPU tests.
+
+BLOCKWISE_ATTENTION = True
+BLOCKWISE_MIN_SEQ = 2048
+BLOCKWISE_BLOCK_K = 512
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                        window: int | None = None, q_offset: int | Array = 0,
+                        block_k: int = BLOCKWISE_BLOCK_K) -> Array:
+    """q: (b, sq, h, hd); k, v: (b, skv, h, hd) (kv already repeated)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    block_k = min(block_k, skv)
+    assert skv % block_k == 0, (skv, block_k)
+    nk = skv // block_k
+    scale = 1.0 / np.sqrt(hd)
+    qf = q.astype(jnp.bfloat16) if q.dtype == jnp.bfloat16 else q
+    qpos = jnp.arange(sq)[:, None] + q_offset                 # (sq, 1)
+
+    kb = jnp.moveaxis(k.reshape(b, nk, block_k, h, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, block_k, h, hd), 1, 0)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, kidx = inputs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kblk).astype(jnp.float32) * scale
+        kpos = kidx * block_k + jnp.arange(block_k)[None, :]  # (1, block_k)
+        mask = jnp.ones((sq, block_k), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        acc_new = corr[..., None] * acc + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vblk).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, h, sq), -1e30, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init,
+                                  (kb, vb, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)            # (b, sq, h, hd)
+
+
+def local_window_attention(q: Array, k: Array, v: Array, window: int) -> Array:
+    """EXACT sliding-window attention as 2-chunk local attention.
+
+    Chunk the sequence at the window size W: a query in chunk i only
+    attends to keys in chunks i-1 and i, so scores are (sq, 2W) instead of
+    (sq, skv) -- compute AND memory drop by skv/(2W) (16x for hymba's
+    W=1024 at 32k). Causal + window masking applied inside the chunk pair.
+    q, k, v: (b, s, h, d) with kv already repeated; s % W == 0.
+    """
+    b, sq, h, hd = q.shape
+    W = window
+    nc = sq // W
+    scale = 1.0 / np.sqrt(hd)
+    qc = q.reshape(b, nc, W, h, hd)
+    kc = k.reshape(b, nc, W, h, hd)
+    vc = v.reshape(b, nc, W, h, hd)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kc], axis=2)               # (b, nc, 2W, h, d)
+    v2 = jnp.concatenate([v_prev, vc], axis=2)
+    s = jnp.einsum("bcqhd,bckhd->bchqk", qc, k2).astype(jnp.float32) * scale
+    qpos = jnp.arange(W)[:, None] + W                        # within the 2W frame
+    kpos = jnp.arange(2 * W)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - W)                # causal + window
+    first = jnp.arange(2 * W)[None, :] >= W                  # chunk 0: no prev
+    mask_first = mask & first
+    cidx = jnp.arange(nc)[:, None, None]
+    m = jnp.where(cidx == 0, mask_first[None], mask[None])   # (nc, W, 2W)
+    s = jnp.where(m[None, :, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bchqk,bckhd->bcqhd", p, v2)
+    return out.reshape(b, sq, h, hd)
+
+
+def gqa_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: int | None = None, q_offset=0,
+                  use_flash: bool = False, allow_blockwise: bool = True) -> Array:
+    """GQA: q has H heads, k/v have KV heads; repeats kv to match."""
+    n_rep = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    if use_flash:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset)
+    skv = k.shape[1]
+    if not allow_blockwise and not (causal and window is not None
+                                    and skv >= 2 * window and skv % window == 0):
+        return attention_scores(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset)
+    if BLOCKWISE_ATTENTION and causal and window is not None \
+            and skv >= 2 * window and skv % window == 0 \
+            and q.shape[1] == skv and not isinstance(q_offset, jax.Array) \
+            and q_offset == 0:
+        return local_window_attention(q, k, v, window)
+    if BLOCKWISE_ATTENTION and skv >= BLOCKWISE_MIN_SEQ and skv % BLOCKWISE_BLOCK_K == 0:
+        return blockwise_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)
+    return attention_scores(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, cache_len,
+                     *, window: int | None = None) -> Array:
+    """One-token decode: q (b, 1, h, hd) against a (b, S, kv, hd) cache.
+
+    ``cache_len`` masks positions >= cache_len (ring-buffer windows pass a
+    full cache and mask nothing but the unwritten tail).
+    """
+    n_rep = q.shape[2] // k_cache.shape[2]
+    k = _repeat_kv(k_cache, n_rep)
+    v = _repeat_kv(v_cache, n_rep)
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    cache_len = jnp.asarray(cache_len).reshape(-1)            # (b,) or (1,)
+    kpos = jnp.arange(k.shape[1])[None, :]                    # (1, S)
+    valid = kpos < cache_len[:, None]                         # (b, S)
+    if window is not None:
+        valid &= kpos >= cache_len[:, None] - window
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# --------------------------------------------------------------------------
+# Gated MLPs
+# --------------------------------------------------------------------------
+
+def glu_mlp(x: Array, w_gate: Array, w_up: Array, w_down: Array,
+            activation: str = "silu") -> Array:
+    act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
+    gate = act(jnp.einsum("bsd,df->bsf", x, w_gate))
+    up = jnp.einsum("bsd,df->bsf", x, w_up)
+    hidden = constrain(gate * up, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", hidden, w_down)
+
+
+def mlp(x: Array, w_in: Array, b_in: Array, w_out: Array, b_out: Array) -> Array:
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, w_in) + b_in)
+    return jnp.einsum("bsf,fd->bsd", h, w_out) + b_out

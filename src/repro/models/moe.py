@@ -1,0 +1,103 @@
+"""Mixture-of-Experts layer (GShard/Switch-style, TPU-idiomatic).
+
+Top-k routing with per-group expert capacity. Dispatch/combine are one-hot
+einsums -- the formulation whose sharding XLA SPMD understands natively:
+experts live on the "model"/"expert" mesh axis, tokens on "data", and the
+dispatch einsum lowers to the all-to-all that dominates the MoE roofline.
+
+Tokens are processed in groups of ``group_size`` so the transient dispatch
+tensor stays ~(T * g * k * cf) elements instead of (T * T * ...): with
+g=512, k=2, cf=1.25 that is 84 MB bf16 per 32k tokens -- VMEM/remat
+friendly. Overflowing tokens beyond an expert's capacity inside a group are
+dropped (standard; the residual stream carries them).
+
+Router math in fp32 (numerics!), expert FFN in model dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_capacity(group_size: int, top_k: int, n_experts: int,
+                 capacity_factor: float = 1.25) -> int:
+    return max(_round_up(int(np.ceil(group_size * top_k * capacity_factor / n_experts)), 4), 4)
+
+
+def route_topk(router_logits: Array, top_k: int, capacity: int):
+    """Build dispatch/combine tensors for one token group.
+
+    Args:
+      router_logits: (g, E) fp32.
+    Returns:
+      dispatch: (g, E, C) bool-ish (model dtype later), combine: (g, E, C)
+      fp32 gate weights, aux: load-balance loss terms.
+    """
+    g, n_experts = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)            # (g, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, slot) within its expert queue: flatten slots
+    # in (slot-major, token) order so slot-0 assignments win capacity first.
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.float32)   # (g, k, E)
+    slot_major = jnp.swapaxes(onehot, 0, 1).reshape(top_k * g, n_experts)
+    pos = jnp.cumsum(slot_major, axis=0) - slot_major                  # (k*g, E)
+    pos = jnp.swapaxes(pos.reshape(top_k, g, n_experts), 0, 1)         # (g, k, E)
+    pos_for_slot = jnp.sum(pos * onehot, axis=-1)                      # (g, k)
+    keep = pos_for_slot < capacity
+
+    pos_oh = jax.nn.one_hot(pos_for_slot, capacity, dtype=jnp.float32)  # (g, k, C)
+    disp_k = onehot[..., :, None] * pos_oh[..., None, :]                # (g, k, E, C)
+    disp_k = disp_k * keep[..., None, None]
+    dispatch = disp_k.sum(axis=1)                                      # (g, E, C)
+    combine = (disp_k * gate_vals[..., None, None]).sum(axis=1)        # (g, E, C)
+
+    # Switch-style load-balance aux loss: E * <f_e * p_e>
+    frac_tokens = jnp.mean(onehot[:, 0, :], axis=0)      # top-1 assignment share
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = n_experts * jnp.sum(frac_tokens * mean_probs)
+    return dispatch, combine, aux
+
+
+def moe_glu(x: Array, router_w: Array, w_gate: Array, w_up: Array, w_down: Array,
+            *, top_k: int, group_size: int = 512, capacity_factor: float = 1.25,
+            activation: str = "silu") -> tuple[Array, Array]:
+    """Token-choice top-k MoE with GLU experts.
+
+    Args:
+      x: (b, s, d).
+      router_w: (d, E). w_gate/w_up: (E, d, f). w_down: (E, f, d).
+    Returns:
+      (y: (b, s, d), aux_loss: scalar fp32)
+    """
+    b, s, d = x.shape
+    n_experts = router_w.shape[-1]
+    tokens = b * s
+    g = min(group_size, tokens)
+    assert tokens % g == 0, f"tokens {tokens} not divisible by group {g}"
+    n_groups = tokens // g
+    capacity = moe_capacity(g, top_k, n_experts, capacity_factor)
+
+    from repro.models.layers import constrain
+    xg = constrain(x.reshape(n_groups, g, d), "moe_tokens", None, None)
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32), router_w.astype(jnp.float32))
+    dispatch, combine, aux = jax.vmap(lambda l: route_topk(l, top_k, capacity))(logits)
+
+    act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
+    disp = dispatch.astype(x.dtype)                                # (n, g, E, C)
+    expert_in = jnp.einsum("ngec,ngd->necd", disp, xg)
+    expert_in = constrain(expert_in, "moe_tokens", "expert", None, "embed")
+    h_gate = act(jnp.einsum("necd,edf->necf", expert_in, w_gate))
+    h_up = jnp.einsum("necd,edf->necf", expert_in, w_up)
+    expert_out = jnp.einsum("necf,efd->necd", h_gate * h_up, w_down)
+    expert_out = constrain(expert_out, "moe_tokens", "expert", None, "embed")
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), expert_out)
+    return y.reshape(b, s, d), jnp.mean(aux)

@@ -1,0 +1,132 @@
+"""Mamba-2 SSD (state-space duality) layer, chunked for the MXU.
+
+Implements the SSD algorithm of arXiv:2405.21060: the selective SSM
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t        (per head, A scalar)
+    y_t = C_t h_t + D x_t
+computed in chunks of length L so the dominant work is batched matmuls
+(intra-chunk "attention-like" term + inter-chunk state recurrence), which
+is exactly the TPU-friendly reformulation the paper is about -- a
+``lax.scan`` carries the (h, p, n) state across chunks.
+
+Single B/C group (ngroups=1, as mamba2-370m). A short depthwise causal
+conv precedes the SSM (mamba's local conv), kernel size 4.
+
+Shapes: x (b, l, h, p); dt (b, l, h); B,C (b, l, n); A (h,); D (h,).
+Decode keeps state (b, h, p, n) + conv tail (b, d_conv_in, k-1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def segsum(dA: Array) -> Array:
+    """Lower-triangular cumulative sums: out[..., i, j] = sum dA[j+1..i].
+
+    dA: (..., L). Returns (..., L, L) with -inf above the diagonal.
+    """
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]      # sum over (j, i]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def causal_conv1d(x: Array, w: Array, b: Array | None = None,
+                  tail: Array | None = None) -> tuple[Array, Array]:
+    """Depthwise causal conv over seq. x: (bt, l, c); w: (k, c).
+
+    Returns (y, new_tail) where tail carries the last k-1 inputs for decode.
+    """
+    k = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail
+    xp = jnp.concatenate([pad, x], axis=1)          # (bt, l+k-1, c)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    if b is not None:
+        y = y + b
+    return y, xp[:, -(k - 1):, :]
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array, D: Array,
+                chunk: int, init_state: Array | None = None
+                ) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    Args:
+      x: (b, l, h, p) -- pre-activation SSM inputs per head.
+      dt: (b, l, h) -- positive step sizes (post-softplus).
+      A: (h,) -- negative decay rates.
+      B, C: (b, l, n) -- shared across heads (ngroups=1).
+      D: (h,) skip.
+      chunk: chunk length L (l % L == 0).
+      init_state: (b, h, p, n) or None.
+
+    Returns:
+      y: (b, l, h, p), final_state: (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    L = chunk
+    assert l % L == 0, (l, L)
+    c = l // L
+
+    f32 = jnp.float32
+    xc = x.reshape(b, c, L, h, p)
+    dtc = dt.reshape(b, c, L, h).astype(f32)
+    Bc = B.reshape(b, c, L, n)
+    Cc = C.reshape(b, c, L, n)
+    dA = dtc * A.astype(f32)                               # (b,c,L,h) negative
+
+    # --- intra-chunk (diagonal block): Y = (C B^T ∘ decay) (dt x)
+    S = segsum(jnp.moveaxis(dA, -1, -2))                   # (b,c,h,L,L)
+    decay = jnp.exp(S)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc.astype(f32), Bc.astype(f32))
+    M = scores[:, :, None] * decay                          # (b,c,h,L,L)
+    dx = (dtc[..., None] * xc.astype(f32))                  # (b,c,L,h,p)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, dx)
+
+    # --- per-chunk outgoing state: S_c = sum_t decay_to_end_t dt_t B_t x_t
+    dA_cum = jnp.cumsum(dA, axis=2)                         # (b,c,L,h)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (b,c,L,h)
+    S_chunk = jnp.einsum("bclh,bcln,bclhp->bchpn", decay_to_end * dtc,
+                         Bc.astype(f32), xc.astype(f32))
+
+    # --- inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # (b,c,h)
+    h0 = jnp.zeros((b, h, p, n), f32) if init_state is None else init_state.astype(f32)
+
+    def body(state, inp):
+        s_c, g_c = inp                                      # (b,h,p,n), (b,h)
+        out_prev = state
+        state = g_c[..., None, None] * state + s_c
+        return state, out_prev
+
+    final, h_prev = jax.lax.scan(
+        body, h0, (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                     # (b,c,h,p,n)
+
+    # --- inter-chunk contribution: C_t decay_from_start_t h_prev
+    decay_in = jnp.exp(dA_cum)                              # (b,c,L,h)
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp", Cc.astype(f32), decay_in, h_prev)
+
+    y = (y_diag + y_off).reshape(b, l, h, p) + (D.astype(f32)[None, None, :, None]
+                                                * x.astype(f32))
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(x: Array, dt: Array, A: Array, B: Array, C: Array, D: Array,
+                    state: Array) -> tuple[Array, Array]:
+    """One-token recurrent update. x: (b, h, p); dt: (b, h); B,C: (b, n)."""
+    f32 = jnp.float32
+    g = jnp.exp(dt.astype(f32) * A.astype(f32))             # (b, h)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(f32), B.astype(f32), x.astype(f32))
+    state = g[..., None, None] * state + upd
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(f32), state)
+    y = y + D.astype(f32)[None, :, None] * x.astype(f32)
+    return y.astype(x.dtype), state

@@ -1,0 +1,665 @@
+"""The assigned-architecture model zoo: one config-driven transformer stack.
+
+Covers six families behind one ``ArchConfig``:
+
+  dense   -- GQA + RoPE + (Swi|Ge)GLU (+ QKV bias, qk-norm, sliding window)
+  moe     -- dense attention + token-choice top-k MoE FFN (GShard einsums)
+  ssm     -- attention-free Mamba-2 SSD blocks
+  hybrid  -- parallel attention + SSD heads per layer (Hymba-style)
+  vlm     -- LM backbone consuming stub patch embeddings (InternVL2-style)
+  audio   -- encoder-decoder with stub conv-frontend features (Whisper-style)
+
+Layers are *stacked* (leading ``layers`` axis) and executed under
+``jax.lax.scan`` so compile time and HLO size are O(1) in depth -- essential
+for 64-80 layer dry-runs. Every parameter carries logical axis names that
+``repro.launch.sharding`` maps onto the ("pod", "data", "model") mesh.
+
+Three entry points (see repro.launch.steps for the jit'd step functions):
+  ``forward_train``    full-sequence causal LM loss
+  ``forward_prefill``  full sequence -> last-position logits + decode cache
+  ``forward_decode``   one token + cache -> logits + updated cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import LogicalParam, constrain
+
+Array = jax.Array
+PyTree = Any
+
+
+# ==========================================================================
+# Config
+# ==========================================================================
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str                       # dense|moe|ssm|vlm|audio|hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int                         # 0 for attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None          # default d_model // n_heads
+    # attention features
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    rope_theta: float = 1e4
+    # mlp
+    activation: str = "silu"             # silu (SwiGLU) | gelu (GeGLU)
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    moe_group: int = 512
+    capacity_factor: float = 1.25
+    # tiny-expert MoE (d_ff << 128*TP): replicate expert weights over
+    # "model" and shard token groups over (data x model) instead -- no
+    # all-to-all, full-width matmuls (§Perf H3b; 6x step-time on granite)
+    moe_token_parallel: bool = False
+    # ssm (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 64
+    conv_kernel: int = 4
+    # enc-dec (audio)
+    encoder_layers: int = 0
+    source_positions: int = 1536         # stub frame embeddings (whisper: 1500->pad 1536)
+    # vlm
+    vision_tokens: int = 0               # stub patch embeddings prepended
+    # misc
+    norm: str = "rms"                    # rms | ln  (whisper uses ln)
+    pos: str = "rope"                    # rope | learned
+    tie_embeddings: bool = False
+    embed_scale: bool = False            # gemma: embeddings * sqrt(d)
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # blockwise attention in TRAIN: a measured per-arch dispatch (§Perf H9)
+    # -- streaming q re-reads cost ~20% of the step bound, worth it only
+    # when dense (S,S) scores pressure HBM (off for gemma/internvl2/whisper
+    # whose 4k-train peaks were fine without it).
+    blockwise_train: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_heads * self.ssm_head_dim
+
+    @property
+    def has_attention(self) -> bool:
+        return self.arch_type != "ssm"
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.arch_type in ("ssm", "hybrid")
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode with O(1)-ish memory per new token at 500k?"""
+        return self.arch_type == "ssm" or self.sliding_window is not None
+
+    def np_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+# ==========================================================================
+# Parameter specs (LogicalParam pytrees; leading "layers" axis is stacked)
+# ==========================================================================
+
+def _attn_specs(cfg: ArchConfig, n_layers: int, dt) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    lp = lambda shape, axes, **kw: LogicalParam((n_layers,) + shape, ("layers",) + axes,
+                                                dtype=dt, **kw)
+    s = {
+        "wq": lp((d, H * hd), ("embed", "heads")),
+        "wk": lp((d, KV * hd), ("embed", "kv_heads")),
+        "wv": lp((d, KV * hd), ("embed", "kv_heads")),
+        "wo": lp((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = lp((H * hd,), ("heads",), scale=0.0)
+        s["bk"] = lp((KV * hd,), ("kv_heads",), scale=0.0)
+        s["bv"] = lp((KV * hd,), ("kv_heads",), scale=0.0)
+    if cfg.qk_norm:
+        s["q_norm"] = lp((hd,), ("head_dim",), scale=0.0)
+        s["k_norm"] = lp((hd,), ("head_dim",), scale=0.0)
+    return s
+
+
+def _mlp_specs(cfg: ArchConfig, n_layers: int, dt, with_bias: bool = False) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    lp = lambda shape, axes, **kw: LogicalParam((n_layers,) + shape, ("layers",) + axes,
+                                                dtype=dt, **kw)
+    if with_bias:  # whisper-style plain GELU MLP
+        return {"w_in": lp((d, f), ("embed", "mlp")),
+                "b_in": lp((f,), ("mlp",), scale=0.0),
+                "w_out": lp((f, d), ("mlp", "embed")),
+                "b_out": lp((d,), ("embed",), scale=0.0)}
+    return {"w_gate": lp((d, f), ("embed", "mlp")),
+            "w_up": lp((d, f), ("embed", "mlp")),
+            "w_down": lp((f, d), ("mlp", "embed"))}
+
+
+def _moe_specs(cfg: ArchConfig, n_layers: int, dt) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    lp = lambda shape, axes, **kw: LogicalParam((n_layers,) + shape, ("layers",) + axes,
+                                                **{"dtype": dt, **kw})
+    return {"router": lp((d, E), ("embed", "expert"), dtype=jnp.float32),
+            "w_gate": lp((E, d, f), ("expert", "embed", "mlp")),
+            "w_up": lp((E, d, f), ("expert", "embed", "mlp")),
+            "w_down": lp((E, f, d), ("expert", "mlp", "embed"))}
+
+
+def _ssm_specs(cfg: ArchConfig, n_layers: int, dt) -> dict:
+    d, di, n, h = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.conv_kernel
+    conv_dim = di + 2 * n
+    lp = lambda shape, axes, **kw: LogicalParam((n_layers,) + shape, ("layers",) + axes,
+                                                dtype=dt, **kw)
+    return {
+        "in_proj": lp((d, 2 * di + 2 * n + h), ("embed", "ssm_proj")),
+        "conv_w": lp((k, conv_dim), ("conv", "ssm_conv"), scale=0.5),
+        "conv_b": lp((conv_dim,), ("ssm_conv",), scale=0.0),
+        "A_log": lp((h,), ("ssm_heads",), scale=1.0),
+        "D": lp((h,), ("ssm_heads",), scale=1.0),
+        "dt_bias": lp((h,), ("ssm_heads",), scale=0.0),
+        "norm": lp((di,), ("ssm_inner",), scale=0.0),
+        "out_proj": lp((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _norm_specs(cfg: ArchConfig, n_layers: int, names: list[str]) -> dict:
+    d = cfg.d_model
+    out = {}
+    for nm in names:
+        out[nm] = LogicalParam((n_layers, d), ("layers", "embed"), scale=0.0,
+                               dtype=jnp.float32)
+        if cfg.norm == "ln":
+            out[nm + "_b"] = LogicalParam((n_layers, d), ("layers", "embed"),
+                                          scale=0.0, dtype=jnp.float32)
+    return out
+
+
+def _decoder_layer_specs(cfg: ArchConfig, n_layers: int, dt,
+                         cross_attention: bool = False) -> dict:
+    s: dict = {}
+    if cfg.arch_type == "ssm":
+        s.update(_norm_specs(cfg, n_layers, ["norm1"]))
+        s["ssm"] = _ssm_specs(cfg, n_layers, dt)
+        return s
+    s.update(_norm_specs(cfg, n_layers, ["norm1", "norm2"]))
+    s["attn"] = _attn_specs(cfg, n_layers, dt)
+    if cfg.arch_type == "hybrid":
+        s["ssm"] = _ssm_specs(cfg, n_layers, dt)
+        s["mix_attn"] = LogicalParam((n_layers, cfg.d_model), ("layers", "embed"),
+                                     scale=0.0, dtype=jnp.float32)
+        s["mix_ssm"] = LogicalParam((n_layers, cfg.d_model), ("layers", "embed"),
+                                    scale=0.0, dtype=jnp.float32)
+    if cross_attention:
+        s.update(_norm_specs(cfg, n_layers, ["norm_x"]))
+        s["xattn"] = _attn_specs(cfg, n_layers, dt)
+    if cfg.is_moe:
+        s["moe"] = _moe_specs(cfg, n_layers, dt)
+    else:
+        s["mlp"] = _mlp_specs(cfg, n_layers, dt, with_bias=(cfg.norm == "ln"))
+    return s
+
+
+def param_specs(cfg: ArchConfig, max_seq: int = 4096) -> PyTree:
+    """Full-model LogicalParam pytree. ``max_seq`` sizes learned positions."""
+    dt = cfg.np_dtype()
+    d = cfg.d_model
+    specs: dict = {
+        "embed": LogicalParam((cfg.vocab, d), ("vocab", "embed"), dtype=dt,
+                              scale=1.0 / np.sqrt(d)),
+        "final_norm": LogicalParam((d,), ("embed",), scale=0.0, dtype=jnp.float32),
+    }
+    if cfg.norm == "ln":
+        specs["final_norm_b"] = LogicalParam((d,), ("embed",), scale=0.0,
+                                             dtype=jnp.float32)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = LogicalParam((d, cfg.vocab), ("embed", "vocab"), dtype=dt)
+    if cfg.pos == "learned":
+        specs["pos_embed"] = LogicalParam((max_seq, d), ("pos", "embed"), dtype=dt,
+                                          scale=0.02)
+    if cfg.arch_type == "audio":
+        specs["enc_pos"] = LogicalParam((cfg.source_positions, d), ("pos", "embed"),
+                                        dtype=dt, scale=0.02)
+        enc_cfg = dataclasses.replace(cfg, arch_type="dense", n_experts=0)
+        specs["encoder"] = _decoder_layer_specs(enc_cfg, cfg.encoder_layers, dt)
+        specs["enc_final_norm"] = LogicalParam((d,), ("embed",), scale=0.0,
+                                               dtype=jnp.float32)
+        specs["enc_final_norm_b"] = LogicalParam((d,), ("embed",), scale=0.0,
+                                                 dtype=jnp.float32)
+        specs["layers"] = _decoder_layer_specs(cfg, cfg.n_layers, dt,
+                                               cross_attention=True)
+    else:
+        specs["layers"] = _decoder_layer_specs(cfg, cfg.n_layers, dt)
+    return specs
+
+
+def init_params(key: Array, cfg: ArchConfig, max_seq: int = 4096) -> PyTree:
+    return L.build_params(key, param_specs(cfg, max_seq))
+
+
+def param_count(cfg: ArchConfig, max_seq: int = 4096) -> int:
+    leaves = jax.tree.leaves(param_specs(cfg, max_seq),
+                             is_leaf=lambda x: isinstance(x, LogicalParam))
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+def active_param_count(cfg: ArchConfig, max_seq: int = 4096) -> int:
+    """Params touched per token (MoE: top_k of n_experts expert params)."""
+    total = param_count(cfg, max_seq)
+    if not cfg.is_moe:
+        return total
+    expert_leaf = cfg.n_layers * (2 * cfg.d_model * cfg.d_ff + cfg.d_ff * cfg.d_model)
+    all_experts = expert_leaf * cfg.n_experts
+    active = expert_leaf * cfg.top_k
+    return total - all_experts + active
+
+
+# ==========================================================================
+# Norm helper
+# ==========================================================================
+
+def _norm(cfg: ArchConfig, x: Array, p: dict, name: str) -> Array:
+    if cfg.norm == "ln":
+        return L.layer_norm(x, p[name], p[name + "_b"], cfg.norm_eps)
+    return L.rms_norm(x, p[name], cfg.norm_eps)
+
+
+# ==========================================================================
+# Attention block (train/prefill/decode)
+# ==========================================================================
+
+def _project_qkv(cfg: ArchConfig, p: dict, x: Array):
+    b, s, _ = x.shape
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, H, hd)
+    k = k.reshape(b, s, KV, hd)
+    v = v.reshape(b, s, KV, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = constrain(q, "batch", "full", "heads", None)
+    k = constrain(k, "batch", "full", "kv_heads", None)
+    v = constrain(v, "batch", "full", "kv_heads", None)
+    return q, k, v
+
+
+def attn_block(cfg: ArchConfig, p: dict, x: Array, positions: Array,
+               *, causal: bool = True, cache: dict | None = None,
+               mode: str = "train"):
+    """Returns (out, new_cache). Cache layout per layer:
+       full attn: {"k","v": (b, S_cache, KV, hd), "len": ()} -- ring buffer
+       when cfg.sliding_window is set (S_cache == window)."""
+    b, s, _ = x.shape
+    if positions.ndim == 1:
+        positions = positions[:, None]                     # (b,) -> (b, 1)
+    q, k, v = _project_qkv(cfg, p, x)
+    if cfg.pos == "rope":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if mode == "train":
+        out = L.gqa_attention(q, k, v, causal=causal, window=cfg.sliding_window,
+                              allow_blockwise=cfg.blockwise_train)
+    elif mode == "prefill":
+        out = L.gqa_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+        W = cfg.sliding_window
+        if W is not None and s >= W:
+            # keep last W positions, aligned to the ring buffer layout
+            shift = (s % W)
+            k_keep = jnp.roll(k[:, -W:], shift, axis=1)
+            v_keep = jnp.roll(v[:, -W:], shift, axis=1)
+            new_cache = {"k": k_keep, "v": v_keep}
+        else:
+            new_cache = {"k": k, "v": v}
+    elif mode == "decode":
+        # positions: (b,) absolute position of the new token
+        pos = positions[:, 0] if positions.ndim > 1 else positions
+        W = cfg.sliding_window
+        if W is not None:
+            slot = pos % W
+        else:
+            slot = pos
+        k_cache = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(
+            c, upd, (i, 0, 0)))(cache["k"], k[:, 0:1].astype(cache["k"].dtype),
+                                slot.astype(jnp.int32))
+        v_cache = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(
+            c, upd, (i, 0, 0)))(cache["v"], v[:, 0:1].astype(cache["v"].dtype),
+                                slot.astype(jnp.int32))
+        cache_len = jnp.minimum(pos + 1, k_cache.shape[1])[:, None]
+        if W is not None:
+            out = L.decode_attention(q, k_cache, v_cache,
+                                     jnp.minimum(pos + 1, W)[:, None])
+        else:
+            out = L.decode_attention(q, k_cache, v_cache, cache_len)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        raise ValueError(mode)
+
+    out = out.reshape(b, s, -1)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_cache
+
+
+def cross_attn_block(cfg: ArchConfig, p: dict, x: Array, enc_out: Array):
+    """Encoder-decoder cross attention (no cache: kv recomputed, tiny)."""
+    b, s, _ = x.shape
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(b, enc_out.shape[1], KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(b, enc_out.shape[1], KV, hd)
+    out = L.gqa_attention(q, k, v, causal=False)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(b, s, -1), p["wo"])
+
+
+# ==========================================================================
+# SSD block
+# ==========================================================================
+
+def ssm_block(cfg: ArchConfig, p: dict, x: Array, *, cache: dict | None = None,
+              mode: str = "train"):
+    """Mamba-2 block. Cache: {"state": (b,h,pd,n), "conv": (b,k-1,conv_dim)}."""
+    b, s, _ = x.shape
+    di, n, h, pd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xs, Bc, Cc, dt = jnp.split(proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    tail = cache["conv"] if cache is not None else None
+    conv_out, new_tail = ssm_lib.causal_conv1d(conv_in, p["conv_w"], p["conv_b"], tail)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = constrain(xs.reshape(b, s, h, pd), "batch", "seq", "ssm_heads", None)
+
+    if mode == "decode":
+        y, state = ssm_lib.ssd_decode_step(xh[:, 0], dt[:, 0], A, Bc[:, 0], Cc[:, 0],
+                                           p["D"], cache["state"])
+        y = y[:, None]
+        new_cache = {"state": state, "conv": new_tail}
+    else:
+        init = cache["state"] if cache is not None else None
+        y, state = ssm_lib.ssd_chunked(xh, dt, A, Bc, Cc, p["D"], cfg.ssm_chunk, init)
+        new_cache = {"state": state, "conv": new_tail} if mode == "prefill" else None
+
+    y = y.reshape(b, s, di)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), new_cache
+
+
+# ==========================================================================
+# One decoder layer (covers all families)
+# ==========================================================================
+
+def decoder_layer(cfg: ArchConfig, p: dict, x: Array, positions: Array,
+                  *, mode: str, cache: dict | None, enc_out: Array | None = None,
+                  causal: bool = True):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+
+    def _sp(out):
+        # Megatron-SP: keep block outputs sequence-sharded entering the
+        # residual add, so tensor-parallel partial sums lower to
+        # reduce-scatter instead of all-reduce (train only; §Perf H7).
+        if mode == "train":
+            return constrain(out, "batch", "seq_res", "embed")
+        return out
+
+    h = _norm(cfg, x, p, "norm1")
+    if cfg.arch_type == "ssm":
+        out, c = ssm_block(cfg, p["ssm"], h, cache=cache, mode=mode)
+        if c:
+            new_cache.update(c)
+        return x + _sp(out), (new_cache or None), aux
+
+    if cfg.arch_type == "hybrid":
+        a_out, a_c = attn_block(cfg, p["attn"], h, positions, causal=causal,
+                                cache=(cache or {}).get("attn"), mode=mode)
+        s_out, s_c = ssm_block(cfg, p["ssm"], h,
+                               cache=(cache or {}).get("ssm"), mode=mode)
+        ga = 0.5 * (1.0 + p["mix_attn"].astype(jnp.float32))
+        gs = 0.5 * (1.0 + p["mix_ssm"].astype(jnp.float32))
+        out = (ga * a_out.astype(jnp.float32) + gs * s_out.astype(jnp.float32)
+               ).astype(x.dtype)
+        if a_c:
+            new_cache["attn"] = a_c
+        if s_c:
+            new_cache["ssm"] = s_c
+    else:
+        out, a_c = attn_block(cfg, p["attn"], h, positions, causal=causal,
+                              cache=(cache or {}).get("attn"), mode=mode)
+        if a_c:
+            new_cache["attn"] = a_c
+    x = x + _sp(out)
+
+    if enc_out is not None:
+        h = _norm(cfg, x, p, "norm_x")
+        x = x + _sp(cross_attn_block(cfg, p["xattn"], h, enc_out))
+
+    h = _norm(cfg, x, p, "norm2")
+    if cfg.is_moe:
+        m = p["moe"]
+        out, aux = moe_lib.moe_glu(h, m["router"], m["w_gate"], m["w_up"], m["w_down"],
+                                   top_k=cfg.top_k, group_size=cfg.moe_group,
+                                   capacity_factor=cfg.capacity_factor,
+                                   activation=cfg.activation)
+    elif cfg.norm == "ln":
+        m = p["mlp"]
+        out = L.mlp(h, m["w_in"], m["b_in"], m["w_out"], m["b_out"])
+    else:
+        m = p["mlp"]
+        out = L.glu_mlp(h, m["w_gate"], m["w_up"], m["w_down"], cfg.activation)
+    return x + _sp(out), (new_cache or None), aux
+
+
+# ==========================================================================
+# Layer-stack scan
+# ==========================================================================
+
+def _scan_layers(cfg: ArchConfig, stacked: PyTree, x: Array, positions: Array,
+                 *, mode: str, cache: PyTree | None, enc_out: Array | None = None,
+                 causal: bool = True):
+    """Scan the stacked decoder layers; cache (if any) has leading L axis."""
+
+    cot_specs = L.get_param_cot_specs()
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, lc = xs
+        if mode == "train" and cot_specs is not None:
+            try:
+                spec_tree = jax.tree.map(lambda _, s: s, lp, cot_specs)
+                lp = jax.tree.map(L.pin_cotangent, lp, spec_tree)
+            except ValueError:
+                pass  # structure mismatch (e.g. encoder stack): skip pinning
+        h = constrain(h, "batch", None, None)
+        h, new_c, a = decoder_layer(cfg, lp, h, positions, mode=mode, cache=lc,
+                                    enc_out=enc_out, causal=causal)
+        if mode == "train":
+            # the carry is the only tensor remat saves per layer: store it
+            # sequence-parallel (Megatron SP) so 64-80 layer stacks fit HBM.
+            h = constrain(h, "batch", "seq_res", "embed")
+        return (h, aux + a), new_c
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+    (x, aux), new_cache = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                       (stacked, cache))
+    return x, aux, new_cache
+
+
+# ==========================================================================
+# Forward passes
+# ==========================================================================
+
+def _embed_inputs(cfg: ArchConfig, params: PyTree, batch: dict) -> tuple[Array, Array]:
+    """Token (+modality) embedding. Returns (h, positions)."""
+    tokens = batch["tokens"]
+    h = params["embed"][tokens].astype(cfg.np_dtype())
+    if cfg.embed_scale:
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    if cfg.arch_type == "vlm":
+        vis = batch["vision_embeds"].astype(h.dtype)      # (b, V, d) stub frontend
+        h = jnp.concatenate([vis, h], axis=1)
+    b, s = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.pos == "learned":
+        h = h + params["pos_embed"][:s][None].astype(h.dtype)
+    return constrain(h, "batch", "seq", "embed"), positions
+
+
+def _run_encoder(cfg: ArchConfig, params: PyTree, enc_feats: Array) -> Array:
+    """Audio encoder over stub conv-frontend features (b, S_src, d)."""
+    h = enc_feats.astype(cfg.np_dtype())
+    s = h.shape[1]
+    h = h + params["enc_pos"][:s][None].astype(h.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], h.shape[:2])
+    enc_cfg = dataclasses.replace(cfg, arch_type="dense", n_experts=0)
+    h, _, _ = _scan_layers(enc_cfg, params["encoder"], h, positions,
+                           mode="train", cache=None, causal=False)
+    return L.layer_norm(h, params["enc_final_norm"], params["enc_final_norm_b"],
+                        cfg.norm_eps)
+
+
+def _lm_head(cfg: ArchConfig, params: PyTree, h: Array) -> Array:
+    h = _norm(cfg, h, params, "final_norm")
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
+
+
+def forward_train(params: PyTree, cfg: ArchConfig, batch: dict) -> tuple[Array, dict]:
+    """Causal-LM loss over the batch. Returns (loss, metrics)."""
+    enc_out = None
+    if cfg.arch_type == "audio":
+        enc_out = _run_encoder(cfg, params, batch["enc_feats"])
+    h, positions = _embed_inputs(cfg, params, batch)
+    h, aux, _ = _scan_layers(cfg, params["layers"], h, positions, mode="train",
+                             cache=None, enc_out=enc_out)
+    if cfg.arch_type == "vlm":                      # loss only on the text span
+        h = h[:, cfg.vision_tokens:]
+    logits = _lm_head(cfg, params, h)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    if cfg.is_moe:
+        loss = loss + 0.01 * aux
+    return loss, {"loss": loss, "aux": aux}
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int,
+               dtype=None) -> PyTree:
+    """Decode cache with leading layer axis (matches the scan)."""
+    dt = dtype or cfg.np_dtype()
+    Lr, b = cfg.n_layers, batch_size
+    hd, KV = cfg.resolved_head_dim, cfg.n_kv_heads
+    S = min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+
+    def attn_cache():
+        return {"k": jnp.zeros((Lr, b, S, KV, hd), dt),
+                "v": jnp.zeros((Lr, b, S, KV, hd), dt)}
+
+    def ssm_cache():
+        return {"state": jnp.zeros((Lr, b, cfg.ssm_heads, cfg.ssm_head_dim,
+                                    cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((Lr, b, cfg.conv_kernel - 1,
+                                   cfg.ssm_inner + 2 * cfg.ssm_state), dt)}
+
+    if cfg.arch_type == "ssm":
+        return ssm_cache()
+    if cfg.arch_type == "hybrid":
+        return {"attn": attn_cache(), "ssm": ssm_cache()}
+    return {"attn": attn_cache()}
+
+
+def forward_prefill(params: PyTree, cfg: ArchConfig, batch: dict,
+                    pad_to: int | None = None) -> tuple[Array, PyTree]:
+    """Full-sequence prefill: last-position logits + populated cache.
+
+    ``pad_to`` grows full-attention KV caches to the decode budget so
+    subsequent ``forward_decode`` steps can write past the prompt length
+    (SWA ring buffers and SSM states are already fixed-size).
+    """
+    enc_out = None
+    if cfg.arch_type == "audio":
+        enc_out = _run_encoder(cfg, params, batch["enc_feats"])
+    h, positions = _embed_inputs(cfg, params, batch)
+    h, _, cache = _scan_layers(cfg, params["layers"], h, positions, mode="prefill",
+                               cache=None, enc_out=enc_out)
+    logits = _lm_head(cfg, params, h[:, -1:])
+    if pad_to is not None and cfg.has_attention and cfg.sliding_window is None:
+        def grow(path_leaf):
+            return path_leaf
+
+        def grow_kv(c):
+            out = dict(c)
+            for k in ("k", "v"):
+                if k in out and out[k].shape[2] < pad_to:
+                    pad = pad_to - out[k].shape[2]
+                    out[k] = jnp.pad(out[k], ((0, 0), (0, 0), (0, pad),
+                                              (0, 0), (0, 0)))
+            return out
+
+        if "attn" in cache:
+            cache = {**cache, "attn": grow_kv(cache["attn"])}
+        elif "k" in cache:
+            cache = grow_kv(cache)
+    return logits, cache
+
+
+def forward_decode(params: PyTree, cfg: ArchConfig, batch: dict, cache: PyTree
+                   ) -> tuple[Array, PyTree]:
+    """One-token decode step. batch: tokens (b,1), positions (b,),
+    plus enc_out (b, S_src, d) for audio."""
+    tokens = batch["tokens"]
+    h = params["embed"][tokens].astype(cfg.np_dtype())
+    if cfg.embed_scale:
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    positions = batch["positions"]
+    if cfg.pos == "learned":
+        h = h + params["pos_embed"][positions][:, None].astype(h.dtype)
+    enc_out = batch.get("enc_out")
+    h, _, new_cache = _scan_layers(cfg, params["layers"], h, positions,
+                                   mode="decode", cache=cache, enc_out=enc_out)
+    logits = _lm_head(cfg, params, h)
+    return logits, new_cache

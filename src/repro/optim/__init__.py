@@ -1,0 +1,5 @@
+from repro.optim.optimizers import Optimizer, sgd, adam, adamw, clip_by_global_norm
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "clip_by_global_norm",
+           "constant", "cosine_decay", "warmup_cosine"]

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (callables step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, decay_steps: int, final_frac: float = 0.0):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(decay_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,6 @@
+from repro.roofline.hlo import parse_hlo_costs, HloCosts
+from repro.roofline.model import (RooflineTerms, roofline_from_costs, HW,
+                                  analytic_flops_per_token, model_flops)
+
+__all__ = ["parse_hlo_costs", "HloCosts", "RooflineTerms", "roofline_from_costs",
+           "HW", "analytic_flops_per_token", "model_flops"]

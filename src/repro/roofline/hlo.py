@@ -1,0 +1,308 @@
+"""Post-optimization HLO cost extraction with while-loop trip accounting.
+
+``compiled.cost_analysis()`` counts each while (lax.scan) body ONCE -- for a
+64-layer scanned model that under-counts FLOPs by 64x. This module parses
+``compiled.as_text()`` instead:
+
+* builds the computation call graph (fusions via ``calls=``/``to_apply=``,
+  whiles via ``body=``/``condition=``),
+* extracts each while's trip count from the constant bound in its condition
+  computation,
+* walks from ENTRY with multiplicative trip factors, accumulating
+    - dot/convolution FLOPs (from output shape x contracting dims),
+    - fusion/dot/collective I/O bytes (post-fusion memory-traffic proxy),
+    - collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+      all-to-all / collective-permute), all-reduce counted 2x (RS+AG).
+
+All numbers are PER-DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+"
+                       r"([\w\-]+)\((.*)$")
+# computation header: "%name (args...) -> type {"; args may contain nested
+# parens (tuple-typed while-body params), so just grab the leading name.
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (sums tuple elements)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = field(default_factory=dict)
+    collective_count: int = 0
+    while_trips: dict = field(default_factory=dict)
+
+    def add_kind(self, kind: str, b: float):
+        self.collective_by_kind[kind] = self.collective_by_kind.get(kind, 0.0) + b
+
+
+def _parse_computations(text: str) -> tuple[dict[str, _Computation], str | None]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    entry: str | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+            m = _COMP_RE.match(line)
+            if m:
+                cur = _Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if stripped == "}" or stripped.startswith("}"):
+            continue
+        if cur is None or "=" not in stripped:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(_Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps, entry
+
+
+def _dot_flops(instr: _Instr, shapes: dict[str, str]) -> float:
+    out_elems = _shape_elems(instr.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    if not m:
+        return 2.0 * out_elems  # unknown: assume rank-1 contraction
+    lhs_name = _first_operand(instr.rest)
+    lhs_type = shapes.get(lhs_name, "")
+    sm = _SHAPE_RE.search(lhs_type)
+    contracted = 1
+    if sm:
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        for ci in m.group(1).split(","):
+            if ci and int(ci) < len(dims):
+                contracted *= dims[int(ci)]
+    return 2.0 * out_elems * contracted
+
+
+def _first_operand(rest: str) -> str:
+    m = re.match(r"\s*%?([\w\.\-]+)", rest)
+    return m.group(1) if m else ""
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands are at the start of rest: "%a, %b, %c), attrs..."
+    out = []
+    depth = 0
+    for tok in re.finditer(r"%([\w\.\-]+)|([(),])", rest):
+        if tok.group(2) == "(":
+            depth += 1
+        elif tok.group(2) == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        elif tok.group(1):
+            out.append(tok.group(1))
+    return out
+
+
+def _while_trip(cond: _Computation) -> int:
+    """Trip count = the constant bound in the condition computation."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def parse_hlo_costs(text: str) -> HloCosts:
+    comps, entry_name = _parse_computations(text)
+    shapes: dict[str, str] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            shapes[ins.name] = ins.type_str
+
+    if entry_name is None:  # fall back: the computation containing a while
+        entry_name = max(comps, key=lambda n: len(comps[n].instrs))
+
+    costs = HloCosts()
+
+    # ---- fusion input sizing -------------------------------------------
+    # Inside a layer-scan while body, fusions receive the FULL stacked
+    # (n_layers, ...) weight arrays as operands but only dynamic-slice one
+    # layer's worth per trip. Counting the full operand would overcount
+    # HBM traffic by ~n_layers x. For each fused computation, map
+    # parameter index -> bytes actually consumed: if a parameter feeds
+    # only dynamic-slice ops, charge the slice output size instead.
+    _fusion_in_memo: dict[str, dict[int, int]] = {}
+
+    def fusion_param_bytes(comp_name: str) -> dict[int, int]:
+        if comp_name in _fusion_in_memo:
+            return _fusion_in_memo[comp_name]
+        out: dict[int, int] = {}
+        comp = comps.get(comp_name)
+        if comp is None:
+            return out
+        params: dict[str, int] = {}
+        for ins in comp.instrs:
+            if ins.opcode == "parameter":
+                m = re.match(r"(\d+)", ins.rest)
+                if m:
+                    params[ins.name] = int(m.group(1))
+        sliced: dict[int, int] = {}
+        consumed_other: set[int] = set()
+        for ins in comp.instrs:
+            ops = _operand_names(ins.rest)
+            for o in ops:
+                if o not in params:
+                    continue
+                idx = params[o]
+                if ins.opcode == "dynamic-slice" and ops and ops[0] == o:
+                    sliced[idx] = sliced.get(idx, 0) + _shape_bytes(ins.type_str)
+                else:
+                    consumed_other.add(idx)
+        for name, idx in params.items():
+            if idx in sliced and idx not in consumed_other:
+                out[idx] = sliced[idx]
+        _fusion_in_memo[comp_name] = out
+        return out
+
+    # ---- memoized per-computation unit costs (multiplier-invariant) ----
+    _dot_memo: dict[str, float] = {}
+
+    def dot_flops_of(comp_name: str, stack=()) -> float:
+        """Dot/conv FLOPs inside a computation incl. nested fusions (x1)."""
+        if comp_name in _dot_memo:
+            return _dot_memo[comp_name]
+        if comp_name not in comps or comp_name in stack:
+            return 0.0
+        total = 0.0
+        for ins in comps[comp_name].instrs:
+            if ins.opcode in ("dot", "convolution"):
+                total += _dot_flops(ins, shapes)
+            elif ins.opcode in ("fusion", "call", "custom-call"):
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", ins.rest):
+                    total += dot_flops_of(m.group(1), stack + (comp_name,))
+        _dot_memo[comp_name] = total
+        return total
+
+    _full_memo: dict[str, tuple] = {}
+
+    def full_costs_of(comp_name: str, stack=()) -> tuple:
+        """(flops, bytes, coll_bytes, coll_count, kinds) of one execution."""
+        if comp_name in _full_memo:
+            return _full_memo[comp_name]
+        if comp_name not in comps or comp_name in stack:
+            return (0.0, 0.0, 0.0, 0, {})
+        fl = by = cb = 0.0
+        cc = 0
+        kinds: dict[str, float] = {}
+        for ins in comps[comp_name].instrs:
+            op = ins.opcode
+            if op in ("dot", "convolution"):
+                fl += _dot_flops(ins, shapes)
+                by += _shape_bytes(ins.type_str) + sum(
+                    _shape_bytes(shapes.get(o, "")) for o in _operand_names(ins.rest))
+            elif op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+                overrides = fusion_param_bytes(m.group(1)) if m else {}
+                in_bytes = 0
+                for i, o in enumerate(_operand_names(ins.rest)):
+                    in_bytes += overrides.get(i, _shape_bytes(shapes.get(o, "")))
+                by += _shape_bytes(ins.type_str) + in_bytes
+                if m:
+                    fl += dot_flops_of(m.group(1))
+            elif any(op.startswith(c) for c in COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                base = next(c for c in COLLECTIVES if op.startswith(c))
+                b = _shape_bytes(ins.type_str)
+                if base == "all-reduce":
+                    b *= 2  # RS + AG
+                cb += b
+                cc += 1
+                kinds[base] = kinds.get(base, 0.0) + b
+                by += _shape_bytes(ins.type_str)
+            elif op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                trips = _while_trip(comps[cm.group(1)]) if cm and cm.group(1) in comps else 1
+                costs.while_trips.setdefault(ins.name, trips)
+                if bm:
+                    sfl, sby, scb, scc, skinds = full_costs_of(
+                        bm.group(1), stack + (comp_name,))
+                    fl += trips * sfl
+                    by += trips * sby
+                    cb += trips * scb
+                    cc += trips * scc
+                    for k, v in skinds.items():
+                        kinds[k] = kinds.get(k, 0.0) + trips * v
+            elif op in ("call", "conditional", "async-start"):
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", ins.rest):
+                    sfl, sby, scb, scc, skinds = full_costs_of(
+                        m.group(1), stack + (comp_name,))
+                    fl += sfl
+                    by += sby
+                    cb += scb
+                    cc += scc
+                    for k, v in skinds.items():
+                        kinds[k] = kinds.get(k, 0.0) + v
+        out = (fl, by, cb, cc, kinds)
+        _full_memo[comp_name] = out
+        return out
+
+    fl, by, cb, cc, kinds = full_costs_of(entry_name)
+    costs.flops = fl
+    costs.bytes_accessed = by
+    costs.collective_bytes = cb
+    costs.collective_count = cc
+    costs.collective_by_kind = kinds
+    return costs

@@ -1,0 +1,107 @@
+"""Three-term roofline model + analytic FLOP cross-check.
+
+Hardware constants (TPU v5e, per the brief):
+  peak compute 197 TFLOP/s bf16 per chip; HBM 819 GB/s; ICI ~50 GB/s/link.
+
+Terms (seconds per step, per chip -- HLO numbers are already per-device):
+  compute    = HLO_FLOPs / peak
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / ICI_bw
+
+``model_flops`` is the 6*N*D (dense) / 6*N_active*D (MoE) useful-compute
+reference; ``useful_ratio`` = model / compiled catches remat & redundancy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.transformer import ArchConfig, param_count, active_param_count
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 / chip
+    hbm_bw: float = 819e9            # B/s
+    ici_bw: float = 50e9             # B/s/link
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    model_flops: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Naive no-overlap bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops, "useful_ratio": self.useful_ratio,
+        }
+
+
+def roofline_from_costs(flops: float, bytes_accessed: float,
+                        collective_bytes: float, model_flops_total: float,
+                        hw: HW = HW()) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops / hw.peak_flops,
+        memory_s=bytes_accessed / hw.hbm_bw,
+        collective_s=collective_bytes / hw.ici_bw,
+        flops=flops, bytes_accessed=bytes_accessed,
+        collective_bytes=collective_bytes,
+        model_flops=model_flops_total,
+        useful_ratio=model_flops_total / max(flops, 1.0),
+    )
+
+
+def model_flops(cfg: ArchConfig, tokens: int, kind: str) -> float:
+    """6*N*D useful-FLOPs reference for ``tokens`` processed tokens.
+
+    train: 6*N*D (fwd+bwd). prefill: 2*N*D. decode: 2*N_active*D per token.
+    MoE uses active params.
+    """
+    n = active_param_count(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def analytic_flops_per_token(cfg: ArchConfig, seq_len: int, kind: str) -> float:
+    """Finer-grained forward FLOPs/token including attention O(s) term."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    per_layer = 0.0
+    if cfg.has_attention:
+        per_layer += 2 * d * hd * (2 * H + 2 * KV)            # qkvo projections
+        kv_span = min(cfg.sliding_window or seq_len, seq_len)
+        per_layer += 2 * 2 * H * hd * (kv_span / 2 if kind != "decode" else kv_span)
+    if cfg.has_ssm:
+        di, n, h, p = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+        per_layer += 2 * d * (2 * di + 2 * n + h) + 2 * di * d
+        Lc = cfg.ssm_chunk
+        per_layer += 2 * Lc * n + 2 * Lc * h * p + 4 * h * p * n
+    if cfg.is_moe:
+        per_layer += 2 * 3 * d * f * cfg.top_k * cfg.capacity_factor + 2 * d * cfg.n_experts
+    elif cfg.d_ff:
+        nmat = 2 if cfg.norm == "ln" else 3
+        per_layer += 2 * nmat * d * f
+    total = per_layer * cfg.n_layers + 2 * d * cfg.vocab      # lm head
+    if kind == "train":
+        total *= 3 + (1 if cfg.remat else 0)                   # bwd + remat fwd
+    return total

@@ -1,0 +1,26 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here -- smoke tests must see
+exactly 1 CPU device (only launch/dryrun.py forces 512 placeholders)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_federation():
+    """A small LTRF-style federation reused across FL tests."""
+    from repro.data.federated import partition, EMNIST_LIKE
+    import dataclasses
+    spec = dataclasses.replace(EMNIST_LIKE, num_classes=8, image_size=16)
+    return partition(spec, num_clients=12, total_samples=600, test_samples=160,
+                     sizes="instagram", global_dist="letterfreq", local="random",
+                     seed=0, name="tiny-ltrf")

@@ -1,0 +1,72 @@
+"""Algorithm 2 tests: plan math, client rebalance, global-KLD reduction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import augmentation as aug
+from repro.core import distribution as dist
+
+
+def test_plan_majority_classes_not_augmented():
+    counts = np.array([100, 90, 10, 5])
+    plan = aug.augmentation_plan(counts, 0.67)
+    c_bar = counts.mean()
+    assert all(plan[counts >= c_bar] == 0)
+    assert all(plan[counts < c_bar] > 0)
+
+
+@given(st.floats(0.1, 1.0), st.floats(1.1, 3.0))
+@settings(max_examples=25, deadline=None)
+def test_plan_alpha_monotone(a_small, a_big):
+    counts = np.array([1000, 500, 100, 20, 4])
+    p_small = aug.augmentation_plan(counts, a_small)
+    p_big = aug.augmentation_plan(counts, a_big)
+    assert np.all(p_big >= p_small)
+
+
+def test_alpha_two_overshoots():
+    """The paper's failure mode: alpha=2 re-imbalances the dataset."""
+    counts = np.array([1000.0, 500.0, 200.0, 50.0, 10.0])
+    c_bar = counts.mean()
+    good = aug.planned_counts(counts, 0.67)
+    bad = aug.planned_counts(counts, 2.0)
+    assert good.max() <= counts.max() * 1.01         # stays bounded
+    assert bad[-1] > 10 * c_bar                      # minority explodes past mean
+    kld_before = float(dist.kld_to_uniform(jnp.asarray(counts)))
+    kld_good = float(dist.kld_to_uniform(jnp.asarray(good)))
+    assert kld_good < kld_before
+
+
+def test_random_affine_shapes_and_finite(key):
+    img = jnp.ones((20, 20, 3))
+    out = aug.random_affine(key, img)
+    assert out.shape == img.shape
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_rebalance_client_counts(key):
+    rng = np.random.default_rng(0)
+    images = rng.normal(size=(30, 12, 12, 1)).astype(np.float32)
+    labels = np.array([0] * 20 + [1] * 8 + [2] * 2)
+    plan = np.array([0, 2, 5])
+    x, y = aug.rebalance_client(key, images, labels, plan)
+    assert (y == 0).sum() == 20                       # untouched
+    assert (y == 1).sum() == 8 * 3                    # 8 + 2 copies each
+    assert (y == 2).sum() == 2 * 6                    # 2 + 5 copies each
+    assert x.shape[0] == y.shape[0]
+
+
+def test_rebalance_federation_reduces_global_kld(key, tiny_federation):
+    fed = tiny_federation
+    before = float(dist.kld_to_uniform(
+        jnp.asarray(fed.client_counts().sum(0))))
+    new_x, new_y, plan, extra = aug.rebalance_federation(
+        key, fed.client_images, fed.client_labels, fed.num_classes, alpha=0.67)
+    counts = np.zeros(fed.num_classes)
+    for y in new_y:
+        counts += np.bincount(y, minlength=fed.num_classes)
+    after = float(dist.kld_to_uniform(jnp.asarray(counts)))
+    assert after < before
+    assert extra > 0

@@ -1,0 +1,46 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_pytree, load_pytree, save_trainer, load_trainer
+
+
+def test_roundtrip_nested(tmp_path, key):
+    tree = {
+        "w": jax.random.normal(key, (17, 5)),
+        "nested": {"b": jnp.arange(8, dtype=jnp.int32),
+                   "scalars": [1, 2.5, "name"]},
+        "tup": (jnp.ones((2, 2), jnp.bfloat16), None),
+    }
+    p = str(tmp_path / "x.ckpt")
+    save_pytree(p, tree, metadata={"round": 3})
+    back = load_pytree(p)
+    np.testing.assert_allclose(np.asarray(back["w"]), np.asarray(tree["w"]))
+    assert back["nested"]["scalars"] == [1, 2.5, "name"]
+    assert back["tup"][0].dtype == jnp.bfloat16
+    assert back["tup"][1] is None
+    import json, os
+    meta = json.load(open(p + ".meta.json"))
+    assert meta["round"] == 3
+
+
+def test_trainer_roundtrip(tmp_path, tiny_federation):
+    from repro.core import LocalSpec
+    from repro.core.fedavg import FedAvgTrainer
+    from repro.models.cnn import emnist_cnn
+    from repro.optim import adam
+    model = emnist_cnn(tiny_federation.num_classes, image_size=16)
+    tr = FedAvgTrainer(model, adam(1e-3), tiny_federation, clients_per_round=3,
+                       local=LocalSpec(10, 1), seed=0)
+    tr.run_round()
+    p = str(tmp_path / "t.ckpt")
+    save_trainer(p, tr)
+
+    tr2 = FedAvgTrainer(model, adam(1e-3), tiny_federation, clients_per_round=3,
+                        local=LocalSpec(10, 1), seed=0)
+    load_trainer(p, tr2)
+    assert tr2._round == 1
+    assert tr2.comm.total_bytes == tr.comm.total_bytes
+    for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(tr2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))

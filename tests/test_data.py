@@ -1,0 +1,96 @@
+"""Data pipeline property tests (partitioners + synthetic generator)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.federated import (partition, letter_frequency_probs,
+                                  normal_pdf_probs, instagram_sizes, table1)
+from repro.data.synthetic import SyntheticSpec, SyntheticTask
+
+SPEC = SyntheticSpec(num_classes=6, image_size=12)
+
+
+@given(st.integers(2, 47))
+@settings(max_examples=20, deadline=None)
+def test_letterfreq_probs_valid(c):
+    p = letter_frequency_probs(c)
+    assert p.shape == (c,)
+    assert p.sum() == pytest.approx(1.0)
+    assert np.all(np.diff(p) <= 1e-12)       # sorted descending
+    if c >= 10:
+        assert p[0] / p[-1] > 2              # genuinely imbalanced
+
+
+@given(st.integers(3, 20))
+@settings(max_examples=10, deadline=None)
+def test_normal_probs_valid(c):
+    p = normal_pdf_probs(c)
+    assert p.sum() == pytest.approx(1.0)
+    assert p[c // 2] >= p[0]                 # peaked in the middle
+
+
+def test_instagram_sizes_heavy_tailed():
+    rng = np.random.default_rng(0)
+    w = instagram_sizes(200, rng)
+    assert w.sum() == pytest.approx(1.0)
+    assert w.max() / np.median(w) > 3        # heavy tail
+
+
+@pytest.mark.parametrize("global_dist", ["balanced", "letterfreq", "normal"])
+def test_partition_totals_and_test_balance(global_dist):
+    fed = partition(SPEC, num_clients=8, total_samples=400, test_samples=120,
+                    sizes="instagram", global_dist=global_dist, local="random",
+                    seed=0)
+    counts = fed.client_counts()
+    assert counts.shape == (8, SPEC.num_classes)
+    assert abs(counts.sum() - 400) / 400 < 0.2
+    # balanced test set (paper invariant)
+    tc = np.bincount(fed.test_labels, minlength=SPEC.num_classes)
+    assert tc.min() == tc.max()
+
+
+def test_global_distribution_respected():
+    fed = partition(SPEC, num_clients=20, total_samples=3000, test_samples=60,
+                    sizes="even", global_dist="letterfreq", local="matched", seed=1)
+    emp = fed.client_counts().sum(0)
+    emp = emp / emp.sum()
+    expect = letter_frequency_probs(SPEC.num_classes)
+    assert np.abs(emp - expect).max() < 0.06
+
+
+def test_no_identical_samples_across_clients():
+    fed = partition(SPEC, num_clients=4, total_samples=200, test_samples=30,
+                    seed=2)
+    hashes = set()
+    for x in fed.client_images:
+        for img in x:
+            h = img.tobytes()
+            assert h not in hashes            # paper: no shared samples
+            hashes.add(h)
+
+
+def test_synthetic_task_learnable_structure():
+    """Same-class samples are closer to their prototype than to others."""
+    task = SyntheticTask(SPEC, seed=3)
+    rng = np.random.default_rng(3)
+    ok = 0
+    for c in range(SPEC.num_classes):
+        s = task.sample(c, 8, rng)
+        d_own = np.abs(s - task.prototypes[c]).mean()
+        d_other = np.mean([np.abs(s - task.prototypes[o]).mean()
+                           for o in range(SPEC.num_classes) if o != c])
+        ok += d_own < d_other
+    assert ok >= SPEC.num_classes - 1
+
+
+def test_table1_settings_structure():
+    feds = table1(SPEC, num_clients=6, total_samples=300, test_samples=60)
+    assert set(feds) == {"BAL1", "BAL2", "INS", "LTRF1", "LTRF2"}
+    n1 = sum(len(y) for y in feds["LTRF1"].client_labels)
+    n2 = sum(len(y) for y in feds["LTRF2"].client_labels)
+    assert 1.7 < n2 / n1 < 2.3               # LTRF2 has ~2x data
+    sizes_ins = [len(y) for y in feds["INS"].client_labels]
+    sizes_bal = [len(y) for y in feds["BAL1"].client_labels]
+    assert np.std(sizes_ins) > np.std(sizes_bal)

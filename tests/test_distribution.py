@@ -1,0 +1,62 @@
+"""Property tests for the distribution/KLD substrate (Astraea's metric)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distribution as dist
+
+counts_arrays = st.integers(2, 12).flatmap(
+    lambda c: st.lists(
+        st.lists(st.floats(0, 1000), min_size=c, max_size=c),
+        min_size=1, max_size=8))
+
+
+@given(counts_arrays)
+@settings(max_examples=50, deadline=None)
+def test_kld_nonnegative(rows):
+    counts = jnp.asarray(np.asarray(rows) + 1e-3)
+    kld = dist.kld_to_uniform(counts)
+    assert np.all(np.asarray(kld) >= -1e-6)
+
+
+@given(st.integers(2, 64))
+@settings(max_examples=20, deadline=None)
+def test_kld_zero_iff_uniform(c):
+    uniform_counts = jnp.full((c,), 7.0)
+    assert float(dist.kld_to_uniform(uniform_counts)) == pytest.approx(0.0, abs=1e-6)
+    skewed = jnp.asarray([10.0] + [0.1] * (c - 1))
+    assert float(dist.kld_to_uniform(skewed)) > 0.1
+
+
+def test_kld_matches_scipy():
+    from scipy.stats import entropy
+    p = np.array([5.0, 3.0, 2.0, 10.0])
+    ours = float(dist.kld_to_uniform(jnp.asarray(p)))
+    theirs = entropy(p / p.sum(), np.full(4, 0.25))
+    assert ours == pytest.approx(theirs, rel=1e-5)
+
+
+def test_merged_scores_match_loop():
+    rng = np.random.default_rng(1)
+    med = rng.uniform(0, 50, 10)
+    clients = rng.uniform(0, 50, (23, 10))
+    vec = np.asarray(dist.merged_kld_scores(jnp.asarray(med), jnp.asarray(clients)))
+    for i in range(23):
+        single = float(dist.kld_to_uniform(jnp.asarray(med + clients[i])))
+        assert vec[i] == pytest.approx(single, rel=1e-5)
+
+
+def test_class_histogram_mask():
+    labels = jnp.asarray([0, 1, 1, 2, 2, 2])
+    mask = jnp.asarray([1, 1, 1, 1, 0, 0], jnp.float32)
+    h = dist.class_histogram(labels, 4, mask)
+    assert np.allclose(np.asarray(h), [1, 2, 1, 0])
+
+
+def test_imbalance_summary_direction():
+    balanced = jnp.full((10, 8), 5.0)
+    skew = jnp.asarray(np.eye(10, 8) * 40 + 0.5)
+    s_bal = dist.imbalance_summary(balanced)
+    s_skew = dist.imbalance_summary(skew)
+    assert float(s_skew["local_kld_mean"]) > float(s_bal["local_kld_mean"])

@@ -1,0 +1,47 @@
+"""Integration test for the multi-pod dry-run entry point (deliverable e).
+
+Runs launch/dryrun.py in a SUBPROCESS (it must set
+--xla_force_host_platform_device_count=512 before jax init, which cannot
+happen inside this pytest process) for one cheap (arch x shape) and checks
+the JSON artifact: 256-chip lowering succeeded, roofline terms present.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.parametrize("arch,shape", [("whisper-base", "decode_32k")])
+def test_dryrun_subprocess_single_pod(tmp_path, arch, shape):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", str(tmp_path)],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=480)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+
+    out = json.load(open(tmp_path / f"{arch}__{shape}__single16x16.json"))
+    assert out["status"] == "ok"
+    assert out["n_chips"] == 256
+    rl = out["roofline"]
+    assert rl["dominant"] in ("compute", "memory", "collective")
+    assert all(rl[k] >= 0 for k in ("compute_s", "memory_s", "collective_s"))
+    assert out["memory"]["peak_estimate_gb"] > 0
+    assert out["hlo_costs"]["while_trips"]        # layer scan detected
+
+
+def test_dryrun_skip_logic_artifact(tmp_path):
+    """long_500k on a full-attention arch must produce a documented skip."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "gemma-2b",
+         "--shape", "long_500k", "--out", str(tmp_path)],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=240)
+    assert proc.returncode == 0
+    out = json.load(open(tmp_path / "gemma-2b__long_500k__single16x16.json"))
+    assert out["status"] == "skipped"
+    assert "full-attention" in out["skip_reason"]

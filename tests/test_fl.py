@@ -1,0 +1,154 @@
+"""FL machinery: client updates, FedAvg aggregation, mediator semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fl
+from repro.core.fl import LocalSpec, make_client_update, weighted_average
+from repro.core.mediator import make_mediator_update
+from repro.models.cnn import emnist_cnn, count_params
+from repro.optim import adam, sgd
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    return emnist_cnn(num_classes=5, image_size=16)
+
+
+def _client_data(key, n, model, cls=0):
+    x = jax.random.normal(key, (n, 16, 16, 1))
+    y = jnp.full((n,), cls, jnp.int32)
+    mask = jnp.ones((n,), jnp.float32)
+    return x, y, mask
+
+
+def test_zero_mask_client_is_noop(small_model, key):
+    """Padding clients must not move the weights (mediator gamma padding)."""
+    params = small_model.init(key)
+    upd = make_client_update(small_model, adam(1e-3), LocalSpec(4, 2))
+    x, y, _ = _client_data(key, 8, small_model)
+    mask = jnp.zeros((8,), jnp.float32)
+    new = upd(params, x, y, mask, key)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_client_update_reduces_loss(small_model, key):
+    params = small_model.init(key)
+    upd = jax.jit(make_client_update(small_model, adam(1e-3), LocalSpec(4, 3)))
+    x, y, mask = _client_data(key, 16, small_model, cls=2)
+    from repro.models.cnn import cross_entropy_loss
+    before = float(cross_entropy_loss(small_model.apply(params, x), y))
+    new = upd(params, x, y, mask, key)
+    after = float(cross_entropy_loss(small_model.apply(new, x), y))
+    assert after < before
+
+
+def test_weighted_average_exact():
+    trees = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0], [5.0, 6.0]])}
+    weights = jnp.asarray([1.0, 1.0, 2.0])
+    avg = weighted_average(trees, weights)
+    np.testing.assert_allclose(np.asarray(avg["w"]),
+                               [(1 + 3 + 10) / 4, (2 + 4 + 12) / 4])
+
+
+def test_weighted_average_ignores_zero_weight():
+    trees = {"w": jnp.asarray([[1.0], [100.0]])}
+    avg = weighted_average(trees, jnp.asarray([1.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(avg["w"]), [1.0])
+
+
+def test_mediator_sequential_vs_parallel(small_model, key):
+    """Mediator (sequential clients) != FedAvg (parallel) -- and the mediator
+    delta equals running the clients one after another by hand."""
+    params = small_model.init(key)
+    spec = LocalSpec(4, 1)
+    med_upd = jax.jit(make_mediator_update(small_model, sgd(0.05), spec,
+                                           mediator_epochs=1))
+    cli_upd = jax.jit(make_client_update(small_model, sgd(0.05), spec))
+
+    k1, k2 = jax.random.split(key)
+    x1, y1, m1 = _client_data(k1, 8, small_model, cls=1)
+    x2, y2, m2 = _client_data(k2, 8, small_model, cls=3)
+    xs = jnp.stack([x1, x2])
+    ys = jnp.stack([y1, y2])
+    ms = jnp.stack([m1, m2])
+
+    delta = med_upd(params, xs, ys, ms, key)
+    # manual sequential pass with the same per-client keys
+    keys = jax.random.split(jax.random.split(key, 1)[0], 2)
+    w = cli_upd(params, x1, y1, m1, keys[0])
+    w = cli_upd(w, x2, y2, m2, keys[1])
+    expect = jax.tree.map(lambda a, b: a - b, w, params)
+    for d, e in zip(jax.tree.leaves(delta), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(d), np.asarray(e), atol=1e-5)
+
+
+def test_fedavg_trainer_round_runs(tiny_federation, key):
+    from repro.core.fedavg import FedAvgTrainer
+    from repro.models.cnn import emnist_cnn
+    model = emnist_cnn(tiny_federation.num_classes, image_size=16)
+    tr = FedAvgTrainer(model, adam(1e-3), tiny_federation, clients_per_round=4,
+                       local=LocalSpec(10, 1), seed=0)
+    hist = tr.fit(2, eval_every=2)
+    assert hist and 0.0 <= hist[-1]["accuracy"] <= 1.0
+    assert hist[-1]["traffic_mb"] > 0
+
+
+def test_astraea_trainer_round_runs(tiny_federation):
+    from repro.core.astraea import AstraeaTrainer
+    from repro.models.cnn import emnist_cnn
+    model = emnist_cnn(tiny_federation.num_classes, image_size=16)
+    tr = AstraeaTrainer(model, adam(1e-3), tiny_federation, clients_per_round=6,
+                        gamma=3, local=LocalSpec(10, 1), mediator_epochs=1,
+                        alpha=0.67, seed=0)
+    hist = tr.fit(2, eval_every=2)
+    assert hist and 0.0 <= hist[-1]["accuracy"] <= 1.0
+    assert tr.last_schedule_stats["num_mediators"] >= 2
+    # augmentation actually added data
+    assert tr.extra_storage_frac > 0
+
+
+def test_astraea_kernel_aggregation_matches(tiny_federation):
+    from repro.core.astraea import AstraeaTrainer
+    from repro.models.cnn import emnist_cnn
+    model = emnist_cnn(tiny_federation.num_classes, image_size=16)
+    mk = lambda uk: AstraeaTrainer(model, sgd(0.05), tiny_federation,
+                                   clients_per_round=4, gamma=2,
+                                   local=LocalSpec(10, 1), alpha=None,
+                                   use_kernel_agg=uk, seed=0)
+    a, b = mk(False), mk(True)
+    a.run_round()
+    b.run_round()
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_comm_meter_formulas():
+    from repro.core.comm import CommMeter
+    m = CommMeter(num_params=1000, bytes_per_param=4)
+    m.fedavg_round(c=10)
+    assert m.total_bytes == 2 * 10 * 4000
+    m2 = CommMeter(num_params=1000, bytes_per_param=4)
+    m2.astraea_round(c=50, gamma=10, mediator_epochs=1)
+    assert m2.total_bytes == 2 * 4000 * (5 + 50)   # paper: 2|w|(ceil(c/g)+c)
+
+
+def test_reweighted_fedavg_runs_and_upweights_minority(tiny_federation):
+    from repro.core.reweighting import (ReweightedFedAvgTrainer,
+                                        inverse_frequency_weights)
+    from repro.models.cnn import emnist_cnn
+    import numpy as np
+    counts = tiny_federation.client_counts().sum(0)
+    w = inverse_frequency_weights(counts)
+    assert w[np.argmin(counts)] == w.max()      # rarest class, biggest weight
+    assert w.mean() == pytest.approx(1.0, rel=1e-5)
+
+    model = emnist_cnn(tiny_federation.num_classes, image_size=16)
+    tr = ReweightedFedAvgTrainer(model, adam(1e-3), tiny_federation,
+                                 clients_per_round=4, local=LocalSpec(10, 1),
+                                 seed=0)
+    hist = tr.fit(2, eval_every=2)
+    assert 0.0 <= hist[-1]["accuracy"] <= 1.0

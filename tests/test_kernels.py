@@ -1,0 +1,107 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@given(m=st.integers(1, 9), n=st.integers(1, 700),
+       dt=st.sampled_from(DTYPES), block=st.sampled_from([128, 256]))
+@settings(max_examples=25, deadline=None)
+def test_fedavg_agg_matches_ref(m, n, dt, block):
+    key = jax.random.PRNGKey(m * 1000 + n)
+    deltas = jax.random.normal(key, (m, n), jnp.float32).astype(dt)
+    weights = jax.random.uniform(jax.random.fold_in(key, 1), (m,)) * 10 + 0.1
+    out = ops.fedavg_agg(deltas, weights, block_n=block)
+    expect = ref.fedavg_agg(deltas, weights)
+    tol = 1e-5 if dt == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), rtol=tol, atol=tol)
+
+
+def test_fedavg_agg_tree_shapes(key):
+    tree = {"a": jax.random.normal(key, (3, 4, 5)),
+            "b": {"c": jax.random.normal(key, (3, 7))}}
+    w = jnp.asarray([1.0, 2.0, 3.0])
+    out = ops.fedavg_agg_tree(tree, w)
+    assert out["a"].shape == (4, 5)
+    assert out["b"]["c"].shape == (7,)
+    expect = jax.tree.map(lambda d: ref.fedavg_agg(d.reshape(3, -1), w).reshape(d.shape[1:]), tree)
+    for o, e in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(e), rtol=1e-5)
+
+
+@given(k=st.integers(1, 300), c=st.integers(2, 64))
+@settings(max_examples=25, deadline=None)
+def test_kld_score_matches_ref(k, c):
+    key = jax.random.PRNGKey(k * 100 + c)
+    med = jax.random.uniform(key, (c,)) * 100
+    cli = jax.random.uniform(jax.random.fold_in(key, 1), (k, c)) * 50
+    out = ops.kld_score(med, cli)
+    expect = ref.kld_score(med, cli)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_kld_score_zero_rows():
+    """All-zero candidate rows (padding) must not produce NaNs."""
+    med = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    cli = jnp.zeros((5, 4))
+    out = np.asarray(ops.kld_score(med, cli))
+    assert np.isfinite(out).all()
+
+
+@pytest.mark.parametrize("s,heads,kv,hd", [(128, 4, 4, 64), (256, 4, 2, 64),
+                                           (256, 8, 1, 128)])
+@pytest.mark.parametrize("window", [None, 64])
+@pytest.mark.parametrize("dt", DTYPES)
+def test_flash_attention_matches_ref(s, heads, kv, hd, window, dt):
+    key = jax.random.PRNGKey(s + heads)
+    q = jax.random.normal(key, (2, s, heads, hd), jnp.float32).astype(dt)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, s, kv, hd), jnp.float32).astype(dt)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, s, kv, hd), jnp.float32).astype(dt)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    n_rep = heads // kv
+    kr = jnp.repeat(k, n_rep, axis=2)
+    vr = jnp.repeat(v, n_rep, axis=2)
+    expect = ref.flash_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(kr, 1, 2),
+                                 jnp.swapaxes(vr, 1, 2), causal=True, window=window)
+    expect = jnp.swapaxes(expect, 1, 2)
+    tol = 2e-4 if dt == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), rtol=tol, atol=tol)
+
+
+@given(nq=st.sampled_from([64, 128]), nk=st.sampled_from([64, 128]),
+       s=st.sampled_from([128, 256]))
+@settings(max_examples=10, deadline=None)
+def test_flash_block_shape_invariance(nq, nk, s):
+    """Output must not depend on the chosen BlockSpec tiling."""
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, s, 2, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, s, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, s, 2, 64))
+    a = ops.flash_attention(q, k, v, block_q=nq, block_k=nk)
+    b = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_q_offset_decodes_chunk():
+    """Chunked prefill: second chunk with q_offset == full-sequence slice."""
+    key = jax.random.PRNGKey(9)
+    s = 256
+    q = jax.random.normal(key, (1, s, 2, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, s, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, s, 2, 64))
+    full = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    # second half of q against ALL of k/v with offset
+    half = ops.flash_attention(q[:, s // 2:], k, v, causal=True,
+                               q_offset=s // 2, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(half), np.asarray(full[:, s // 2:]),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,80 @@
+"""HLO cost parser: verified against a hand-checkable compiled program."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo import parse_hlo_costs
+from repro.roofline.model import roofline_from_costs, HW
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_scan_flops_scaled_by_trip_count():
+    def f(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    w = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+    c = _compile(f, w, x)
+    costs = parse_hlo_costs(c.as_text())
+    expect = 8 * 2 * 32 * 256 * 256          # trips x dot flops
+    assert costs.flops == pytest.approx(expect, rel=0.05)
+    assert 8 in costs.while_trips.values()
+
+
+def test_single_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((128, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 64), jnp.float32)
+    c = _compile(f, a, b)
+    costs = parse_hlo_costs(c.as_text())
+    assert costs.flops == pytest.approx(2 * 128 * 512 * 64, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def f(w, x):
+        def outer(h, _):
+            def inner(h2, wl):
+                return jnp.tanh(h2 @ wl), None
+            h2, _ = jax.lax.scan(inner, h, w)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, None, length=3)
+        return h.sum()
+
+    w = jax.ShapeDtypeStruct((4, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((16, 128), jnp.float32)
+    c = _compile(f, w, x)
+    costs = parse_hlo_costs(c.as_text())
+    expect = 3 * 4 * 2 * 16 * 128 * 128
+    assert costs.flops == pytest.approx(expect, rel=0.05)
+
+
+def test_bytes_accessed_reasonable():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    b = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    c = _compile(f, a, b)
+    costs = parse_hlo_costs(c.as_text())
+    io = 3 * 1024 * 1024 * 4
+    assert io * 0.9 <= costs.bytes_accessed <= io * 2.5
+
+
+def test_roofline_terms_math():
+    t = roofline_from_costs(flops=197e12, bytes_accessed=819e9,
+                            collective_bytes=50e9, model_flops_total=100e12,
+                            hw=HW())
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)
+    assert t.useful_ratio == pytest.approx(100 / 197, rel=1e-3)
+    assert t.dominant in ("compute", "memory", "collective")

@@ -1,0 +1,68 @@
+"""Algorithm 3 tests: greedy mediator rescheduling."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduling
+
+
+def _random_counts(rng, k=20, c=10, skew=True):
+    if skew:
+        counts = np.zeros((k, c))
+        for i in range(k):
+            cls = rng.choice(c, size=2, replace=False)
+            counts[i, cls] = rng.integers(10, 60, 2)
+        return counts
+    return rng.integers(1, 50, (k, c)).astype(float)
+
+
+def test_every_client_assigned_once():
+    rng = np.random.default_rng(0)
+    counts = _random_counts(rng)
+    meds = scheduling.reschedule(counts, gamma=4)
+    seen = [c for m in meds for c in m.clients]
+    assert sorted(seen) == list(range(20))
+    assert all(len(m.clients) <= 4 for m in meds)
+
+
+@given(st.integers(1, 7), st.integers(5, 30))
+@settings(max_examples=20, deadline=None)
+def test_gamma_respected(gamma, k):
+    rng = np.random.default_rng(gamma * 100 + k)
+    counts = _random_counts(rng, k=k)
+    meds = scheduling.reschedule(counts, gamma=gamma)
+    assert all(len(m.clients) <= gamma for m in meds)
+    assert sum(len(m.clients) for m in meds) == k
+
+
+def test_greedy_beats_random_on_skewed_clients():
+    """Fig. 7: the KLD of greedy mediators is far below arbitrary grouping."""
+    rng = np.random.default_rng(42)
+    counts = _random_counts(rng, k=40, c=10, skew=True)
+    greedy = scheduling.schedule_stats(scheduling.reschedule(counts, gamma=8))
+    rand = scheduling.schedule_stats(
+        scheduling.random_schedule(40, 8, counts, seed=0))
+    assert greedy["kld_mean"] < rand["kld_mean"]
+    assert greedy["kld_mean"] < 0.2      # paper: mediators reach < 0.2
+
+
+def test_complementary_clients_pair_up():
+    """Clients G (classes 0,1) and H (classes 2,3) should share a mediator."""
+    counts = np.array([
+        [10, 10, 0, 0],
+        [0, 0, 10, 10],
+        [10, 10, 0, 0],
+        [0, 0, 10, 10],
+    ], float)
+    meds = scheduling.reschedule(counts, gamma=2)
+    for m in meds:
+        kinds = {tuple(counts[c] > 0) for c in m.clients}
+        assert len(kinds) == 2           # each mediator mixes both skews
+
+
+def test_kernel_scoring_matches_reference():
+    rng = np.random.default_rng(3)
+    counts = _random_counts(rng, k=25, c=12)
+    m_ref = scheduling.reschedule(counts, gamma=5, use_kernel=False)
+    m_ker = scheduling.reschedule(counts, gamma=5, use_kernel=True)
+    assert [m.clients for m in m_ref] == [m.clients for m in m_ker]
