@@ -250,6 +250,110 @@ def bench_communication(scale: E.Scale):
 
 
 # ----------------------------------------------------------------------
+# Round-engine benchmark: per-round host repacking (old trainers) vs the
+# packed-once device-resident engine, at M mediators
+# ----------------------------------------------------------------------
+
+def bench_engine(scale: E.Scale):
+    """us_per_call = wall time per synchronization round. ``legacy`` is the
+    pre-engine path (numpy (M, gamma, pad, ...) repack on the host every
+    round); ``engine`` gathers from packed-once device buffers inside the
+    jitted round. ``packs`` counts host packing events: 1 per schedule for
+    the engine, 1 per round for the legacy path."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.core import LocalSpec, scheduling
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    from repro.core.fl import weighted_average
+    from repro.core.mediator import make_mediator_update
+    from repro.data.federated import partition, EMNIST_LIKE
+    from repro.models.cnn import emnist_cnn
+    from repro.optim import adam
+
+    gamma, batch, reps = 2, 12, 3
+    spec = dataclasses.replace(EMNIST_LIKE, num_classes=8, image_size=16)
+    model = emnist_cnn(8, image_size=16)
+    local = LocalSpec(batch, 1)
+    out = {}
+    for m_target in (4, 16, 64):
+        k = m_target * gamma
+        fed = partition(spec, num_clients=k, total_samples=k * 2 * batch,
+                        test_samples=64, sizes="even", global_dist="balanced",
+                        local="random", seed=0, name=f"eng{m_target}")
+        eng = FLRoundEngine(
+            model, adam(1e-3), fed,
+            EngineConfig.astraea(clients_per_round=k, gamma=gamma,
+                                 local=local, seed=0))
+        eng.run_round()                      # compile + schedule pack
+        jax.block_until_ready(eng.params)
+        t0 = time.time()
+        for _ in range(reps):
+            eng.run_round()
+        jax.block_until_ready(eng.params)
+        new_us = (time.time() - t0) / reps * 1e6
+
+        # ---- legacy reference: numpy repack inside the round loop.
+        # Intentionally mirrors tests/test_engine.py::_legacy_astraea_run,
+        # which proves this exact round bit-identical to the engine; keep
+        # the two in sync if the reference semantics ever change. ----
+        sizes = [x.shape[0] for x in fed.client_images]
+        pad = ((max(sizes) + batch - 1) // batch) * batch
+        X, Y, MK = fed.padded(pad)
+        rng = np.random.default_rng(0)
+        sel = rng.choice(fed.num_clients, size=k, replace=False)
+        meds = scheduling.reschedule(fed.client_counts()[sel], gamma)
+        groups = [[int(sel[i]) for i in mm.clients] for mm in meds]
+        m_count = len(groups)
+        med_upd = make_mediator_update(model, adam(1e-3), local, 1)
+
+        @jax.jit
+        def round_fn(params, xs, ys, ms, keys):
+            deltas = jax.vmap(med_upd, in_axes=(None, 0, 0, 0, 0))(
+                params, xs, ys, ms, keys)
+            delta = weighted_average(deltas, ms.sum(axis=(1, 2)))
+            return jax.tree.map(lambda p, d: p + d, params, delta)
+
+        def legacy_round(params, r):
+            t_pack = time.time()
+            xs = np.zeros((m_count, gamma, pad) + X.shape[2:], np.float32)
+            ys = np.zeros((m_count, gamma, pad), np.int32)
+            ms = np.zeros((m_count, gamma, pad), np.float32)
+            for mi, clients in enumerate(groups):
+                for ci, cid in enumerate(clients):
+                    xs[mi, ci] = X[cid]
+                    ys[mi, ci] = Y[cid]
+                    ms[mi, ci] = MK[cid]
+            pack_s = time.time() - t_pack
+            keys = jax.random.split(
+                jax.random.fold_in(jax.random.PRNGKey(1), r), m_count)
+            return round_fn(params, jnp.asarray(xs), jnp.asarray(ys),
+                            jnp.asarray(ms), keys), pack_s
+
+        params = model.init(jax.random.PRNGKey(0))
+        params, _ = legacy_round(params, 0)  # compile
+        jax.block_until_ready(params)
+        t0, pack_total = time.time(), 0.0
+        for r in range(reps):
+            params, pack_s = legacy_round(params, r + 1)
+            pack_total += pack_s
+        jax.block_until_ready(params)
+        old_us = (time.time() - t0) / reps * 1e6
+        pack_us = pack_total / reps * 1e6
+
+        _emit(f"engine/M{m_count}/legacy", old_us,
+              f"pack_us={pack_us:.0f};packs_per_round=1")
+        _emit(f"engine/M{m_count}/engine", new_us,
+              f"speedup={old_us / new_us:.2f}x;"
+              f"packs={eng.num_schedule_packs};rounds={eng._round}")
+        out[f"M{m_count}"] = {"legacy_us": old_us, "engine_us": new_us,
+                              "pack_us": pack_us,
+                              "engine_packs": eng.num_schedule_packs,
+                              "engine_rounds": eng._round}
+    _save("engine", out)
+
+
+# ----------------------------------------------------------------------
 # Kernel microbenchmarks (wall time per call, interpret mode on CPU)
 # ----------------------------------------------------------------------
 
@@ -319,6 +423,7 @@ ALL = {
     "c_gamma": bench_c_gamma,
     "epochs": bench_epochs,
     "communication": bench_communication,
+    "engine": bench_engine,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }

@@ -15,7 +15,29 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib
+    zstandard = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(data: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(data)
+    return zlib.compress(data, 6)
+
+
+def _decompress(data: bytes) -> bytes:
+    if data[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "'zstandard' package is not installed")
+        return zstandard.ZstdDecompressor().decompress(data)
+    return zlib.decompress(data)
 
 PyTree = Any
 
@@ -79,7 +101,7 @@ def save_pytree(path: str, tree: PyTree, metadata: dict | None = None) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     packed = msgpack.packb(_encode(tree), use_bin_type=True)
     with open(path, "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(packed))
+        f.write(_compress(packed))
     if metadata is not None:
         with open(path + ".meta.json", "w") as f:
             json.dump(metadata, f, indent=2, default=str)
@@ -87,7 +109,7 @@ def save_pytree(path: str, tree: PyTree, metadata: dict | None = None) -> None:
 
 def load_pytree(path: str) -> PyTree:
     with open(path, "rb") as f:
-        packed = zstandard.ZstdDecompressor().decompress(f.read())
+        packed = _decompress(f.read())
     return _decode(msgpack.unpackb(packed, raw=False))
 
 

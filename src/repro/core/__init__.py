@@ -1,8 +1,10 @@
 """Astraea core: the paper's contribution as composable JAX modules."""
 from repro.core import distribution, augmentation, scheduling, fl, comm
 from repro.core.astraea import AstraeaTrainer
+from repro.core.engine import EngineConfig, FLRoundEngine
 from repro.core.fedavg import FedAvgTrainer
 from repro.core.fl import LocalSpec
 
 __all__ = ["distribution", "augmentation", "scheduling", "fl", "comm",
-           "AstraeaTrainer", "FedAvgTrainer", "LocalSpec"]
+           "AstraeaTrainer", "EngineConfig", "FLRoundEngine", "FedAvgTrainer",
+           "LocalSpec"]

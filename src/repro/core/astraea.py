@@ -12,33 +12,24 @@ Workflow (paper Fig. 3):
    E_m mediator epochs), and FedAvg-aggregate the mediator deltas with
    weights n_m / n.
 
-The mediator fleet is vmapped: mediators are padded to gamma client slots
-with zero-mask dummies. Aggregation uses the ``fedavg_agg`` Pallas kernel
-path when ``use_kernel_agg`` (flattened-parameter weighted reduction);
-default is the pure-jnp ``weighted_average`` (same math, XLA-fused).
+The round itself is executed by ``core.engine.FLRoundEngine`` (the
+device-resident, mediator-sharded round program); this class owns the
+paper-specific rebalancing phase and presents the historical trainer API.
+Aggregation uses the ``fedavg_agg`` Pallas kernel path when
+``use_kernel_agg``; default is the pure-jnp ``weighted_average``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import augmentation, scheduling
-from repro.core.comm import CommMeter
-from repro.core.fl import LocalSpec, weighted_average, evaluate
-from repro.core.mediator import make_mediator_update
+from repro.core import augmentation
+from repro.core.engine import EngineConfig, FLRoundEngine
+from repro.core.fl import LocalSpec
 from repro.data.federated import FederatedDataset
-from repro.models.cnn import Model, count_params
+from repro.models.cnn import Model
 from repro.optim.optimizers import Optimizer
-
-PyTree = Any
-
-
-def _pad_multiple(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
 
 
 @dataclass
@@ -72,80 +63,46 @@ class AstraeaTrainer:
             self.augmentation_plan = None
             self.extra_storage_frac = 0.0
 
-        sizes = [x.shape[0] for x in self.data.client_images]
-        pad = _pad_multiple(max(sizes), self.local.batch_size)
-        self._x, self._y, self._mask = self.data.padded(pad)
-        self._counts = self.data.client_counts()
-        self._rng = np.random.default_rng(self.seed)
-        self.params = self.model.init(key)
-        self.comm = CommMeter(count_params(self.params))
-        self.last_schedule_stats: dict | None = None
-        self._schedule_cache: dict | None = None
+        # donate_params=False: the historical trainer API let callers keep
+        # references to trainer.params across rounds; donation (the engine
+        # default) would invalidate those buffers on accelerators
+        self.engine = FLRoundEngine(
+            self.model, self.opt, self.data,
+            EngineConfig.astraea(
+                clients_per_round=self.clients_per_round, gamma=self.gamma,
+                local=self.local, mediator_epochs=self.mediator_epochs,
+                use_kernel_agg=self.use_kernel_agg,
+                reschedule_every_round=self.reschedule_every_round,
+                donate_params=False, seed=self.seed))
+        self.history = self.engine.history
 
-        mediator_update = make_mediator_update(self.model, self.opt, self.local,
-                                               self.mediator_epochs)
+    # ---- historical trainer surface, delegated to the engine ----
+    @property
+    def params(self):
+        return self.engine.params
 
-        @jax.jit
-        def round_fn(params, xs, ys, masks, keys):
-            # xs: (M, gamma, pad, ...) -- vmap over mediators
-            deltas = jax.vmap(mediator_update, in_axes=(None, 0, 0, 0, 0))(
-                params, xs, ys, masks, keys)
-            weights = masks.sum(axis=(1, 2))                     # n_m
-            delta = self._aggregate(deltas, weights)
-            return jax.tree.map(lambda p, d: p + d, params, delta)
+    @params.setter
+    def params(self, value):
+        self.engine.params = value
 
-        self._round_fn = round_fn
-        self._round = 0
+    @property
+    def comm(self):
+        return self.engine.comm
 
-    # ---- aggregation (Eq. 6 over deltas) ----
-    def _aggregate(self, deltas: PyTree, weights: jax.Array) -> PyTree:
-        if self.use_kernel_agg:
-            from repro.kernels import ops as kops
-            return kops.fedavg_agg_tree(deltas, weights)
-        return weighted_average(deltas, weights)
+    @property
+    def last_schedule_stats(self):
+        return self.engine.last_schedule_stats
 
-    # ---- scheduling phase (Alg. 3) ----
-    def _mediators_for(self, sel: np.ndarray) -> list[list[int]]:
-        meds = scheduling.reschedule(self._counts[sel], self.gamma)
-        self.last_schedule_stats = scheduling.schedule_stats(meds)
-        return [[int(sel[i]) for i in m.clients] for m in meds]
+    @property
+    def _round(self):
+        return self.engine._round
+
+    @_round.setter
+    def _round(self, value):
+        self.engine._round = value
 
     def run_round(self) -> None:
-        c = min(self.clients_per_round, self.data.num_clients)
-        if self.reschedule_every_round or self._schedule_cache is None:
-            sel = self._rng.choice(self.data.num_clients, size=c, replace=False)
-            mediators = self._mediators_for(sel)
-            self._schedule_cache = {"mediators": mediators}
-        mediators = self._schedule_cache["mediators"]
-        m_count = len(mediators)
-
-        # pack into (M, gamma, ...) padded arrays
-        sample_shape = self._x.shape[2:]
-        pad = self._x.shape[1]
-        xs = np.zeros((m_count, self.gamma, pad) + sample_shape, np.float32)
-        ys = np.zeros((m_count, self.gamma, pad), np.int32)
-        ms = np.zeros((m_count, self.gamma, pad), np.float32)
-        for mi, clients in enumerate(mediators):
-            for ci, cid in enumerate(clients):
-                xs[mi, ci] = self._x[cid]
-                ys[mi, ci] = self._y[cid]
-                ms[mi, ci] = self._mask[cid]
-
-        keys = jax.random.split(
-            jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), self._round), m_count)
-        self.params = self._round_fn(self.params, jnp.asarray(xs), jnp.asarray(ys),
-                                     jnp.asarray(ms), keys)
-        self.comm.astraea_round(c, self.gamma, self.mediator_epochs)
-        self._round += 1
+        self.engine.run_round()
 
     def fit(self, rounds: int, eval_every: int = 10) -> list[dict]:
-        for _ in range(rounds):
-            self.run_round()
-            if self._round % eval_every == 0 or self._round == rounds:
-                m = evaluate(self.model, self.params,
-                             self.data.test_images, self.data.test_labels)
-                m.update(round=self._round, traffic_mb=self.comm.megabytes)
-                if self.last_schedule_stats:
-                    m["mediator_kld_mean"] = self.last_schedule_stats["kld_mean"]
-                self.history.append(m)
-        return self.history
+        return self.engine.fit(rounds, eval_every)

@@ -1,0 +1,275 @@
+"""Sharded FL round engine: pack once, gather on device, shard mediators.
+
+One engine drives both algorithms in this repo:
+
+* **Astraea** (paper Alg. 1/3): KLD-greedy mediator schedule, up to ``gamma``
+  clients per mediator trained *sequentially* for ``E_m`` mediator epochs,
+  FedAvg aggregation (Eq. 6) over the mediator weight *deltas*.
+* **FedAvg** (the baseline): exactly the ``gamma=1`` + random-singleton
+  schedule + full-weight aggregation configuration of the same engine --
+  every "mediator" holds one client training from the global weights.
+
+What makes it an engine rather than a trainer loop:
+
+1. **Pack once.** The padded per-client arrays ``(K, pad, ...)`` are moved
+   to device at construction. A schedule is a tiny ``(M, gamma)`` int32
+   gather index plus a 0/1 slot mask; ``run_round`` never rebuilds host
+   numpy buffers (the old trainers re-packed ``(M, gamma, pad, ...)`` on
+   the host every round). Gathering ``x_all[idx]`` happens on device
+   inside the jitted round. Slot-mask zeros make empty client slots exact
+   no-ops (masked loss is 0 => zero grads => zero Adam updates), so a
+   dummy slot may harmlessly gather client 0's data.
+2. **Mediator sharding.** Mediators are distributed over the ``mediator``
+   axis of a device mesh via shard_map; ``M`` is padded up to the mesh
+   size with zero-weight dummy mediators (also exact no-ops). On a 1-device
+   CPU mesh this degrades to plain vmap semantics bit-for-bit.
+3. **Donated params.** The round executable receives the parameter buffer
+   with ``donate_argnums`` so the server-side update is in-place on
+   accelerators.
+4. **Kernel aggregation.** ``use_kernel_agg`` routes Eq. 6 through the
+   ``fedavg_agg`` Pallas kernel (interpret-mode on CPU, Mosaic on TPU);
+   default is the pure-jnp ``weighted_average`` (same math, XLA-fused).
+
+RNG note: per-round keys are split at the *real* mediator count before
+dummy-mediator padding (``jax.random.split`` is not prefix-stable), so the
+trajectory is independent of the mesh size and bit-identical to the
+pre-engine trainers on a single device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import scheduling
+from repro.core.comm import CommMeter
+from repro.core.fl import (LocalSpec, evaluate, make_client_update,
+                           weighted_average)
+from repro.core.mediator import make_mediator_update
+from repro.data.federated import FederatedDataset
+from repro.launch.compat import shard_map
+from repro.launch.mesh import make_mediator_mesh
+from repro.models.cnn import Model, count_params
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+def _pad_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static round configuration. ``astraea()``/``fedavg()`` build the two
+    canonical settings; everything between them is a valid ablation."""
+    clients_per_round: int                  # c
+    gamma: int                              # max clients per mediator
+    local: LocalSpec                        # B, E
+    mediator_epochs: int = 1                # E_m
+    schedule: str = "kld"                   # "kld" (Alg. 3) | "random"
+    aggregate: str = "delta"                # "delta" (Astraea) | "weights" (FedAvg)
+    use_kernel_agg: bool = False
+    reschedule_every_round: bool = False
+    donate_params: bool = True
+    # floor for the padded mediator count (rounded up to the mesh size);
+    # fixes M across reschedules so the round executable is jitted once
+    pad_mediators_to: int | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.schedule not in ("kld", "random"):
+            raise ValueError(f"unknown schedule {self.schedule!r}")
+        if self.aggregate not in ("delta", "weights"):
+            raise ValueError(f"unknown aggregate {self.aggregate!r}")
+        if self.aggregate == "weights" and self.gamma != 1:
+            raise ValueError("weight aggregation implies gamma=1 (FedAvg)")
+        if self.pad_mediators_to is not None and self.pad_mediators_to < 1:
+            raise ValueError("pad_mediators_to must be >= 1")
+
+    @classmethod
+    def astraea(cls, *, clients_per_round: int, gamma: int, local: LocalSpec,
+                mediator_epochs: int = 1, **kw) -> "EngineConfig":
+        return cls(clients_per_round=clients_per_round, gamma=gamma,
+                   local=local, mediator_epochs=mediator_epochs,
+                   schedule="kld", aggregate="delta", **kw)
+
+    @classmethod
+    def fedavg(cls, *, clients_per_round: int, local: LocalSpec,
+               **kw) -> "EngineConfig":
+        """FedAvg == one client per mediator, fresh random singleton schedule
+        every round, full-weight aggregation."""
+        kw.setdefault("reschedule_every_round", True)
+        return cls(clients_per_round=clients_per_round, gamma=1, local=local,
+                   schedule="random", aggregate="weights", **kw)
+
+
+class FLRoundEngine:
+    """Device-resident federated round executor (see module docstring)."""
+
+    def __init__(self, model: Model, opt: Optimizer, data: FederatedDataset,
+                 cfg: EngineConfig, *, mesh=None,
+                 loss_fn: Callable | None = None):
+        self.model, self.opt, self.data, self.cfg = model, opt, data, cfg
+        self.mesh = mesh if mesh is not None else make_mediator_mesh()
+        self._msize = int(self.mesh.shape["mediator"])
+
+        sizes = [x.shape[0] for x in data.client_images]
+        pad = _pad_multiple(max(sizes), cfg.local.batch_size)
+        # packed ONCE: device-resident (K, pad, ...) buffers + masks
+        xs, ys, mask = data.padded(pad)
+        self._x = jnp.asarray(xs)
+        self._y = jnp.asarray(ys)
+        self._mask = jnp.asarray(mask)
+        self._counts = data.client_counts()
+        self._rng = np.random.default_rng(cfg.seed)
+
+        # commit params to the replicated mesh sharding up front: round
+        # outputs carry it, so an uncommitted init would cache-miss the
+        # round executable once (a full recompile) on the second round
+        from jax.sharding import NamedSharding
+        replicated = NamedSharding(self.mesh, P())
+        self.params = jax.device_put(model.init(jax.random.PRNGKey(cfg.seed)),
+                                     replicated)
+        self.comm = CommMeter(count_params(self.params))
+        self.history: list[dict] = []
+        self.last_schedule_stats: dict | None = None
+        self.num_schedule_packs = 0             # host packing events (bench)
+        self._schedule: tuple | None = None
+        self._round = 0
+        self._round_fn = self._build_round_fn(loss_fn)
+
+    # ------------------------------------------------------------------
+    # round program
+    # ------------------------------------------------------------------
+    def _build_round_fn(self, loss_fn):
+        cfg = self.cfg
+        parallel_clients = cfg.aggregate == "weights"
+        if parallel_clients:
+            client_update = make_client_update(self.model, self.opt, cfg.local,
+                                               loss_fn=loss_fn)
+        else:
+            mediator_update = make_mediator_update(self.model, self.opt,
+                                                   cfg.local,
+                                                   cfg.mediator_epochs,
+                                                   loss_fn=loss_fn)
+        P_med = P("mediator")
+
+        def _train(params, x_all, y_all, m_all, idx, slot, keys):
+            # idx/slot/keys arrive as this device's (M_local, ...) shard;
+            # x_all/y_all/m_all are the replicated client store.
+            if parallel_clients:
+                cid = idx[:, 0]
+                ms = m_all[cid] * slot[:, :1]
+                outs = jax.vmap(client_update, in_axes=(None, 0, 0, 0, 0))(
+                    params, x_all[cid], y_all[cid], ms, keys)
+                return outs, ms.sum(axis=1)
+            ms = m_all[idx] * slot[..., None]
+            outs = jax.vmap(mediator_update, in_axes=(None, 0, 0, 0, 0))(
+                params, x_all[idx], y_all[idx], ms, keys)
+            return outs, ms.sum(axis=(1, 2))
+
+        train = shard_map(_train, self.mesh,
+                          in_specs=(P(), P(), P(), P(), P_med, P_med, P_med),
+                          out_specs=(P_med, P_med), manual_axes=("mediator",))
+
+        def round_fn(params, x_all, y_all, m_all, idx, slot, keys):
+            stacked, weights = train(params, x_all, y_all, m_all,
+                                     idx, slot, keys)
+            agg = self._aggregate(stacked, weights)
+            if parallel_clients:
+                return agg
+            return jax.tree.map(lambda p, d: p + d, params, agg)
+
+        donate = (0,) if cfg.donate_params else ()
+        return jax.jit(round_fn, donate_argnums=donate)
+
+    def _aggregate(self, stacked: PyTree, weights: jax.Array) -> PyTree:
+        """Eq. 6 over the stacked (M, ...) mediator results."""
+        if self.cfg.use_kernel_agg:
+            from repro.kernels import ops as kops
+            return kops.fedavg_agg_tree(stacked, weights)
+        return weighted_average(stacked, weights)
+
+    # ------------------------------------------------------------------
+    # scheduling (host side: tiny integer work, no sample movement)
+    # ------------------------------------------------------------------
+    def _groups_for(self, sel: np.ndarray) -> list[list[int]]:
+        cfg = self.cfg
+        if cfg.schedule == "kld":
+            meds = scheduling.reschedule(self._counts[sel], cfg.gamma)
+            self.last_schedule_stats = scheduling.schedule_stats(meds)
+            return [[int(sel[i]) for i in m.clients] for m in meds]
+        if cfg.schedule == "random":
+            if cfg.gamma == 1:      # FedAvg: selection order, one client each
+                self.last_schedule_stats = None
+                return [[int(k)] for k in sel]
+            meds = scheduling.random_schedule(len(sel), cfg.gamma,
+                                              self._counts[sel],
+                                              seed=cfg.seed + self._round)
+            self.last_schedule_stats = scheduling.schedule_stats(meds)
+            return [[int(sel[i]) for i in m.clients] for m in meds]
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
+
+    def _pack_schedule(self, sel: np.ndarray) -> tuple:
+        """Schedule -> device-resident gather plan: (idx, slot, m_real)."""
+        groups = self._groups_for(sel)
+        m_real = len(groups)
+        m_pad = self.cfg.pad_mediators_to or m_real
+        if m_pad < m_real:
+            raise ValueError(
+                f"pad_mediators_to={m_pad} smaller than the schedule "
+                f"({m_real} mediators)")
+        m_pad = _pad_multiple(m_pad, self._msize)
+        idx = np.zeros((m_pad, self.cfg.gamma), np.int32)
+        slot = np.zeros((m_pad, self.cfg.gamma), np.float32)
+        for mi, clients in enumerate(groups):
+            for ci, cid in enumerate(clients):
+                idx[mi, ci] = cid
+                slot[mi, ci] = 1.0
+        self.num_schedule_packs += 1
+        return jnp.asarray(idx), jnp.asarray(slot), m_real
+
+    def _round_keys(self, m_real: int, m_pad: int) -> jax.Array:
+        base = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed + 1),
+                                  self._round)
+        keys = jax.random.split(base, m_real)
+        if m_pad > m_real:  # dummy mediators: any key is a no-op
+            pad = jnp.zeros((m_pad - m_real,) + keys.shape[1:], keys.dtype)
+            keys = jnp.concatenate([keys, pad])
+        return keys
+
+    # ------------------------------------------------------------------
+    # driving
+    # ------------------------------------------------------------------
+    def run_round(self) -> None:
+        cfg = self.cfg
+        c = min(cfg.clients_per_round, self.data.num_clients)
+        if cfg.reschedule_every_round or self._schedule is None:
+            sel = self._rng.choice(self.data.num_clients, size=c, replace=False)
+            self._schedule = self._pack_schedule(sel)
+        idx, slot, m_real = self._schedule
+        keys = self._round_keys(m_real, idx.shape[0])
+        self.params = self._round_fn(self.params, self._x, self._y, self._mask,
+                                     idx, slot, keys)
+        if cfg.aggregate == "weights":
+            self.comm.fedavg_round(c)
+        else:
+            self.comm.astraea_round(c, cfg.gamma, cfg.mediator_epochs)
+        self._round += 1
+
+    def fit(self, rounds: int, eval_every: int = 10) -> list[dict]:
+        for _ in range(rounds):
+            self.run_round()
+            if self._round % eval_every == 0 or self._round == rounds:
+                m = evaluate(self.model, self.params,
+                             self.data.test_images, self.data.test_labels)
+                m.update(round=self._round, traffic_mb=self.comm.megabytes)
+                if self.last_schedule_stats:
+                    m["mediator_kld_mean"] = self.last_schedule_stats["kld_mean"]
+                self.history.append(m)
+        return self.history

@@ -2,29 +2,21 @@
 
 Each communication round: sample ``c`` online clients, every selected client
 trains E local epochs *in parallel* from the same global weights, the server
-aggregates with weights n_k / n (Eq. 6). Selected clients are vmapped -- one
-XLA program per federation shape.
+aggregates with weights n_k / n (Eq. 6).
+
+FedAvg is the ``gamma=1`` + random-singleton-schedule + full-weight
+aggregation configuration of ``core.engine.FLRoundEngine``; this class is a
+thin wrapper presenting the historical trainer API.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.fl import LocalSpec, make_client_update, weighted_average, evaluate
-from repro.core.comm import CommMeter
+from repro.core.engine import EngineConfig, FLRoundEngine
+from repro.core.fl import LocalSpec
 from repro.data.federated import FederatedDataset
-from repro.models.cnn import Model, count_params
+from repro.models.cnn import Model
 from repro.optim.optimizers import Optimizer
-
-PyTree = Any
-
-
-def _pad_multiple(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
 
 
 @dataclass
@@ -39,43 +31,39 @@ class FedAvgTrainer:
     history: list[dict] = field(default_factory=list)
 
     def __post_init__(self):
-        sizes = [x.shape[0] for x in self.data.client_images]
-        pad = _pad_multiple(max(sizes), self.local.batch_size)
-        self._x, self._y, self._mask = self.data.padded(pad)
-        self._sizes = self._mask.sum(axis=1)
-        self._rng = np.random.default_rng(self.seed)
-        self.params = self.model.init(jax.random.PRNGKey(self.seed))
-        self.comm = CommMeter(count_params(self.params))
-        client_update = make_client_update(self.model, self.opt, self.local,
-                                           loss_fn=self.loss_fn)
+        # donate_params=False: see AstraeaTrainer -- historical callers may
+        # hold references to trainer.params across rounds
+        self.engine = FLRoundEngine(
+            self.model, self.opt, self.data,
+            EngineConfig.fedavg(clients_per_round=self.clients_per_round,
+                                local=self.local, donate_params=False,
+                                seed=self.seed),
+            loss_fn=self.loss_fn)
+        self.history = self.engine.history
 
-        @jax.jit
-        def round_fn(params, xs, ys, masks, keys):
-            ws = jax.vmap(client_update, in_axes=(None, 0, 0, 0, 0))(
-                params, xs, ys, masks, keys)
-            weights = masks.sum(axis=(1,))
-            return weighted_average(ws, weights)
+    # ---- historical trainer surface, delegated to the engine ----
+    @property
+    def params(self):
+        return self.engine.params
 
-        self._round_fn = round_fn
-        self._round = 0
+    @params.setter
+    def params(self, value):
+        self.engine.params = value
+
+    @property
+    def comm(self):
+        return self.engine.comm
+
+    @property
+    def _round(self):
+        return self.engine._round
+
+    @_round.setter
+    def _round(self, value):
+        self.engine._round = value
 
     def run_round(self) -> None:
-        c = min(self.clients_per_round, self.data.num_clients)
-        sel = self._rng.choice(self.data.num_clients, size=c, replace=False)
-        keys = jax.random.split(
-            jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), self._round), c)
-        self.params = self._round_fn(
-            self.params, jnp.asarray(self._x[sel]), jnp.asarray(self._y[sel]),
-            jnp.asarray(self._mask[sel]), keys)
-        self.comm.fedavg_round(c)
-        self._round += 1
+        self.engine.run_round()
 
     def fit(self, rounds: int, eval_every: int = 10) -> list[dict]:
-        for _ in range(rounds):
-            self.run_round()
-            if self._round % eval_every == 0 or self._round == rounds:
-                m = evaluate(self.model, self.params,
-                             self.data.test_images, self.data.test_labels)
-                m.update(round=self._round, traffic_mb=self.comm.megabytes)
-                self.history.append(m)
-        return self.history
+        return self.engine.fit(rounds, eval_every)

@@ -24,10 +24,12 @@ PyTree = Any
 
 
 def make_mediator_update(model: Model, opt: Optimizer, local: LocalSpec,
-                         mediator_epochs: int) -> Callable:
+                         mediator_epochs: int,
+                         loss_fn: Callable | None = None) -> Callable:
     """Returns ``mediator_update(params, xs, ys, masks, key) -> delta`` where
-    ``xs/ys/masks`` carry a leading ``gamma`` client axis."""
-    client_update = make_client_update(model, opt, local)
+    ``xs/ys/masks`` carry a leading ``gamma`` client axis. ``loss_fn``
+    replaces the default masked cross-entropy (see core.fl)."""
+    client_update = make_client_update(model, opt, local, loss_fn=loss_fn)
 
     def mediator_update(params: PyTree, xs: Array, ys: Array, masks: Array,
                         key: Array) -> PyTree:

@@ -1,0 +1,61 @@
+"""Cross-version jax API shims (0.4.x <-> 0.5+).
+
+Three APIs this codebase leans on moved between jax releases:
+
+* ``shard_map``: ``jax.experimental.shard_map.shard_map(..., auto=...)``
+  (0.4.x) became ``jax.shard_map(..., axis_names=..., check_vma=...)``.
+  ``shard_map`` here takes the *manual* axis names and translates.
+* ``jax.set_mesh`` (0.5+) vs the classic ``with mesh:`` context (0.4.x).
+* ``AbstractMesh((sizes), (names))`` (0.5+) vs
+  ``AbstractMesh(((name, size), ...))`` (0.4.x).
+
+Everything engine/launch-side goes through these so the same code lowers on
+both toolchains.
+"""
+from __future__ import annotations
+
+from contextlib import nullcontext
+from typing import Any
+
+import jax
+
+__all__ = ["shard_map", "use_mesh", "abstract_mesh"]
+
+
+def shard_map(f, mesh, in_specs, out_specs, *, manual_axes: tuple | None = None,
+              check: bool = True):
+    """``shard_map`` with *manual_axes* semantics on any jax version.
+
+    ``manual_axes=None`` means fully manual (every mesh axis). ``check``
+    maps to ``check_vma`` (new) / ``check_rep`` (old).
+    """
+    if hasattr(jax, "shard_map"):
+        kw: dict[str, Any] = {"check_vma": check}
+        if manual_axes is not None:
+            kw["axis_names"] = set(manual_axes)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if manual_axes is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check, auto=auto)
+
+
+def use_mesh(mesh):
+    """Context manager making *mesh* the ambient mesh for jit/collectives."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):  # 0.4.x: Mesh is itself a context manager
+        return mesh
+    return nullcontext()
+
+
+def abstract_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Device-free AbstractMesh for spec-building on any jax version."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, axis_names)          # jax >= 0.5
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, shape)))  # jax 0.4.x

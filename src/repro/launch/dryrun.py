@@ -168,7 +168,8 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
                 lambda ns: NamedSharding(mesh, P(*tuple(ns.spec)[1:])), layer_shards)
             set_param_cot_specs(per_layer)
         t0 = time.time()
-        with jax.set_mesh(mesh):
+        from repro.launch.compat import use_mesh
+        with use_mesh(mesh):
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                              donate_argnums=donate)
             lowered = jitted.lower(*args)
@@ -186,6 +187,8 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     hlo_text = compiled.as_text()
     costs = parse_hlo_costs(hlo_text)
 

@@ -19,6 +19,7 @@ import numpy as np
 
 import repro.configs as C
 from repro.core import scheduling
+from repro.launch.compat import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import param_shardings, TRAIN_RULES
 from repro.launch.steps import make_fl_round
@@ -92,7 +93,7 @@ def main():
 
     for r in range(args.rounds):
         t0 = time.time()
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             params = jax.jit(fl_round)(params, tokens, labels, w)
         loss, _ = T.forward_train(params, cfg,
                                   {"tokens": tokens[:2], "labels": labels[:2]})

@@ -23,6 +23,18 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_mediator_mesh(num_devices: int | None = None):
+    """1-D mesh over a ``mediator`` axis for the FL round engine.
+
+    Astraea's mediator fleet is embarrassingly parallel across the round
+    (mediators only talk at aggregation), so the engine shards the mediator
+    batch axis over every available device. On CPU containers this is a
+    1-device mesh and the engine degrades to plain vmap semantics.
+    """
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("mediator",))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Mesh axes that carry the batch: ("pod","data") or ("data",)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.launch import compat
 from repro.models import transformer as T
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 
@@ -146,10 +147,10 @@ def make_fl_round(cfg: T.ArchConfig, mesh, param_spec_tree: PyTree,
     pspecs = jax.tree.map(lambda _: P(), param_spec_tree)
     bspec = P(daxes)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(compat.shard_map, mesh=mesh,
              in_specs=(pspecs, bspec, bspec, bspec),
-             out_specs=pspecs, check_vma=False,
-             axis_names=set(daxes))
+             out_specs=pspecs, check=False,
+             manual_axes=daxes)
     def fl_round(params, tokens, labels, weights):
         # tokens here: (local_batch, S) -- this mediator's client stream
         from repro.models import layers as _L

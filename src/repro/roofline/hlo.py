@@ -132,7 +132,14 @@ def _dot_flops(instr: _Instr, shapes: dict[str, str]) -> float:
 
 
 def _first_operand(rest: str) -> str:
-    m = re.match(r"\s*%?([\w\.\-]+)", rest)
+    """First operand NAME. Operand lists come in two dialects:
+    bare (``%a, %b)``) and typed (``f32[128,512]{1,0} %a, ...)``) -- in the
+    typed dialect the leading token is the dtype, so prefer the first
+    %-prefixed name and only fall back to the leading bare word."""
+    ops = _operand_names(rest)
+    if ops:
+        return ops[0]
+    m = re.match(r"\s*([\w\.\-]+)", rest)
     return m.group(1) if m else ""
 
 

@@ -1,5 +1,108 @@
 """Shared test fixtures. NOTE: no XLA_FLAGS here -- smoke tests must see
-exactly 1 CPU device (only launch/dryrun.py forces 512 placeholders)."""
+exactly 1 CPU device (only launch/dryrun.py forces 512 placeholders).
+
+If ``hypothesis`` is missing (optional dev dep, see requirements-dev.txt) we
+install a minimal fallback into ``sys.modules`` BEFORE the property-test
+modules import it: deterministic random sampling from the same strategy
+surface the suite uses (integers/floats/sampled_from/lists). Property tests
+then still run -- with fewer, seeded examples -- instead of erroring the
+whole collection."""
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import random
+    import types
+
+    _FALLBACK_EXAMPLES = int(os.environ.get("FALLBACK_HYPOTHESIS_EXAMPLES", "5"))
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+        def flatmap(self, fn):
+            return _Strategy(lambda rng: fn(self.example(rng)).example(rng))
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self.example(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    v = self.example(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate never satisfied")
+            return _Strategy(draw)
+
+    def _integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _lists(elem, min_size=0, max_size=None):
+        def draw(rng):
+            hi = max_size if max_size is not None else min_size + 5
+            n = rng.randint(min_size, hi)
+            return [elem.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _given(*strats, **kwstrats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES),
+                        _FALLBACK_EXAMPLES)
+                rng = random.Random(fn.__qualname__)
+                for _ in range(n):
+                    ex = [s.example(rng) for s in strats]
+                    kw = {k: s.example(rng) for k, s in kwstrats.items()}
+                    fn(*args, *ex, **kw, **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            # @settings may sit either above or below @given
+            if hasattr(fn, "_max_examples"):
+                wrapper._max_examples = fn._max_examples
+            wrapper.hypothesis_fallback = True
+            return wrapper
+        return deco
+
+    def _settings(max_examples=None, **_kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.assume = lambda cond: None
+    _hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+    _st.lists = _lists
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 import jax
 import numpy as np
 import pytest

@@ -1,0 +1,232 @@
+"""FLRoundEngine invariants (the device-resident sharded round program).
+
+The references here deliberately re-implement the PRE-ENGINE trainer round:
+host-side numpy repacking of (M, gamma, pad, ...) every round, vmap over
+mediators, weighted_average aggregation -- exactly what
+core/astraea.py and core/fedavg.py did before the engine refactor. The
+engine must reproduce those trajectories from its packed-once device
+buffers (bit-identically for the packing claim)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LocalSpec, scheduling
+from repro.core.engine import EngineConfig, FLRoundEngine
+from repro.core.fl import make_client_update, weighted_average
+from repro.core.mediator import make_mediator_update
+from repro.models.cnn import emnist_cnn
+from repro.optim import adam
+
+
+@pytest.fixture(scope="module")
+def model(tiny_federation):
+    return emnist_cnn(tiny_federation.num_classes, image_size=16)
+
+
+def _pad_multiple(n, m):
+    return ((n + m - 1) // m) * m
+
+
+def _leaves_equal(a, b, assert_fn):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert_fn(np.asarray(x), np.asarray(y))
+
+
+def _legacy_astraea_run(model, opt, data, *, c, gamma, local, mediator_epochs,
+                        seed, rounds):
+    """The pre-refactor AstraeaTrainer round loop: numpy repack per round."""
+    sizes = [x.shape[0] for x in data.client_images]
+    pad = _pad_multiple(max(sizes), local.batch_size)
+    X, Y, MK = data.padded(pad)
+    counts = data.client_counts()
+    rng = np.random.default_rng(seed)
+    params = model.init(jax.random.PRNGKey(seed))
+    med_upd = make_mediator_update(model, opt, local, mediator_epochs)
+
+    @jax.jit
+    def round_fn(params, xs, ys, ms, keys):
+        deltas = jax.vmap(med_upd, in_axes=(None, 0, 0, 0, 0))(
+            params, xs, ys, ms, keys)
+        delta = weighted_average(deltas, ms.sum(axis=(1, 2)))
+        return jax.tree.map(lambda p, d: p + d, params, delta)
+
+    sel = rng.choice(data.num_clients, size=c, replace=False)
+    meds = scheduling.reschedule(counts[sel], gamma)
+    groups = [[int(sel[i]) for i in m.clients] for m in meds]
+    m_count = len(groups)
+    for r in range(rounds):
+        xs = np.zeros((m_count, gamma, pad) + X.shape[2:], np.float32)
+        ys = np.zeros((m_count, gamma, pad), np.int32)
+        ms = np.zeros((m_count, gamma, pad), np.float32)
+        for mi, clients in enumerate(groups):
+            for ci, cid in enumerate(clients):
+                xs[mi, ci] = X[cid]
+                ys[mi, ci] = Y[cid]
+                ms[mi, ci] = MK[cid]
+        keys = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(seed + 1), r), m_count)
+        params = round_fn(params, jnp.asarray(xs), jnp.asarray(ys),
+                          jnp.asarray(ms), keys)
+    return params
+
+
+def _legacy_fedavg_run(model, opt, data, *, c, local, seed, rounds):
+    """The pre-refactor FedAvgTrainer round loop."""
+    sizes = [x.shape[0] for x in data.client_images]
+    pad = _pad_multiple(max(sizes), local.batch_size)
+    X, Y, MK = data.padded(pad)
+    rng = np.random.default_rng(seed)
+    params = model.init(jax.random.PRNGKey(seed))
+    cli_upd = make_client_update(model, opt, local)
+
+    @jax.jit
+    def round_fn(params, xs, ys, masks, keys):
+        ws = jax.vmap(cli_upd, in_axes=(None, 0, 0, 0, 0))(
+            params, xs, ys, masks, keys)
+        return weighted_average(ws, masks.sum(axis=(1,)))
+
+    for r in range(rounds):
+        sel = rng.choice(data.num_clients, size=c, replace=False)
+        keys = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(seed + 1), r), c)
+        params = round_fn(params, jnp.asarray(X[sel]), jnp.asarray(Y[sel]),
+                          jnp.asarray(MK[sel]), keys)
+    return params
+
+
+def test_packed_once_bit_identical_to_per_round_repacking(model,
+                                                          tiny_federation):
+    """(a) Device-resident gather plan == host numpy repacking, bitwise."""
+    eng = FLRoundEngine(
+        model, adam(1e-3), tiny_federation,
+        EngineConfig.astraea(clients_per_round=6, gamma=3,
+                             local=LocalSpec(10, 1), seed=0))
+    for _ in range(2):
+        eng.run_round()
+    expect = _legacy_astraea_run(model, adam(1e-3), tiny_federation,
+                                 c=6, gamma=3, local=LocalSpec(10, 1),
+                                 mediator_epochs=1, seed=0, rounds=2)
+    # packing happened once (one schedule), not once per round
+    assert eng.num_schedule_packs == 1 and eng._round == 2
+    _leaves_equal(eng.params, expect, np.testing.assert_array_equal)
+
+
+def test_astraea_trainer_matches_pre_refactor_run(model, tiny_federation):
+    """(b) Engine-backed AstraeaTrainer == pre-refactor trainer, 2 rounds
+    (through the augmentation phase: the reference consumes tr.data)."""
+    from repro.core.astraea import AstraeaTrainer
+    tr = AstraeaTrainer(model, adam(1e-3), tiny_federation,
+                        clients_per_round=6, gamma=3, local=LocalSpec(10, 1),
+                        mediator_epochs=2, alpha=0.67, seed=0)
+    tr.run_round()
+    tr.run_round()
+    expect = _legacy_astraea_run(model, adam(1e-3), tr.data,
+                                 c=6, gamma=3, local=LocalSpec(10, 1),
+                                 mediator_epochs=2, seed=0, rounds=2)
+    _leaves_equal(
+        tr.params, expect,
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6))
+    assert tr.last_schedule_stats["num_mediators"] >= 2
+
+
+def test_fedavg_is_gamma1_engine_config(model, tiny_federation):
+    """(c) FedAvg == the gamma=1 singleton-schedule engine configuration."""
+    cfg = EngineConfig.fedavg(clients_per_round=4, local=LocalSpec(10, 1),
+                              seed=0)
+    assert cfg.gamma == 1 and cfg.schedule == "random" \
+        and cfg.aggregate == "weights"
+    eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg)
+    for _ in range(2):
+        eng.run_round()
+    expect = _legacy_fedavg_run(model, adam(1e-3), tiny_federation,
+                                c=4, local=LocalSpec(10, 1), seed=0, rounds=2)
+    _leaves_equal(
+        eng.params, expect,
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6))
+    # FedAvg reschedules (and thus repacks its tiny gather plan) every round
+    assert eng.num_schedule_packs == 2
+
+
+@pytest.mark.parametrize("n", [1000, 4097])
+def test_kernel_agg_matches_weighted_average_ragged(n):
+    """(d) fedavg_agg on ragged N (not a block_n multiple) == Eq. 6."""
+    from repro.kernels import ops as kops
+    key = jax.random.PRNGKey(n)
+    deltas = jax.random.normal(key, (5, n), jnp.float32)
+    weights = jnp.asarray([3.0, 0.0, 1.5, 7.0, 0.25])
+    out = kops.fedavg_agg(deltas, weights, block_n=256)
+    expect = weighted_average(deltas, weights)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_engine_kernel_agg_path_matches_jnp(model, tiny_federation):
+    """(d') the engine's kernel aggregation hot loop == the jnp path."""
+    mk = lambda uk: FLRoundEngine(
+        model, adam(1e-3), tiny_federation,
+        EngineConfig.astraea(clients_per_round=4, gamma=2,
+                             local=LocalSpec(10, 1), use_kernel_agg=uk,
+                             seed=0))
+    a, b = mk(False), mk(True)
+    a.run_round()
+    b.run_round()
+    _leaves_equal(
+        a.params, b.params,
+        lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-5))
+
+
+_MULTI_DEVICE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.core import LocalSpec
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    from repro.data.federated import partition, EMNIST_LIKE
+    from repro.launch.mesh import make_mediator_mesh
+    from repro.models.cnn import emnist_cnn
+    from repro.optim import adam
+
+    spec = dataclasses.replace(EMNIST_LIKE, num_classes=8, image_size=16)
+    fed = partition(spec, num_clients=12, total_samples=600, test_samples=160,
+                    sizes="instagram", global_dist="letterfreq",
+                    local="random", seed=0, name="tiny")
+    model = emnist_cnn(8, image_size=16)
+    cfg = EngineConfig.astraea(clients_per_round=6, gamma=3,
+                               local=LocalSpec(10, 1), seed=0)
+    # pad_mediators_to=3 is NOT a multiple of the 4-device mesh: the
+    # engine must round it up instead of handing shard_map a ragged M
+    cfg4 = dataclasses.replace(cfg, pad_mediators_to=3)
+    e4 = FLRoundEngine(model, adam(1e-3), fed, cfg4,
+                       mesh=make_mediator_mesh(4))
+    e1 = FLRoundEngine(model, adam(1e-3), fed, cfg,
+                       mesh=make_mediator_mesh(1))
+    e4.run_round()
+    e1.run_round()
+    diff = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+               for a, b in zip(jax.tree.leaves(e4.params),
+                               jax.tree.leaves(e1.params)))
+    assert diff < 1e-5, diff
+    print("OK", diff)
+""")
+
+
+def test_engine_multi_device_mediator_mesh(tmp_path):
+    """(e) shard_map over a 4-device mediator mesh (dummy-mediator padding
+    and mesh-rounding of pad_mediators_to included) matches the 1-device
+    run. Subprocess: the device count must be forced before jax
+    initializes."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _MULTI_DEVICE_SCRIPT],
+                          env=env, capture_output=True, text=True, timeout=480)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "OK" in proc.stdout

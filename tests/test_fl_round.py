@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 import repro.configs as C
+from repro.launch.compat import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import param_shardings, TRAIN_RULES
 from repro.launch.steps import make_fl_round
@@ -53,7 +54,7 @@ def test_fl_round_matches_sequential_reference(setup):
 
     fl_round = make_fl_round(cfg, mesh, spec_tree, learning_rate=0.01,
                              local_steps=4, mediator_epochs=1)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         out = jax.jit(fl_round)(params, tokens, labels, weights)
     expect = _reference_round(cfg, params, tokens, labels, 0.01, 4)
     for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
@@ -70,7 +71,7 @@ def test_fl_round_mediator_epochs(setup):
     weights = jnp.full((2,), 32.0)
     fl2 = make_fl_round(cfg, mesh, spec_tree, learning_rate=0.01,
                         local_steps=2, mediator_epochs=2)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         out = jax.jit(fl2)(params, tokens, labels, weights)
     w = _reference_round(cfg, params, tokens, labels, 0.01, 2)
     w = _reference_round(cfg, w, tokens, labels, 0.01, 2)

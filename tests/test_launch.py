@@ -3,10 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh
 
 import repro.configs as C
 from repro.configs.base import INPUT_SHAPES, input_specs
+from repro.launch.compat import abstract_mesh
 from repro.launch.steps import suggest_microbatches
 from repro.models import transformer as T
 
@@ -38,7 +38,7 @@ def test_input_specs_cover_all_pairs(aid, shape_name):
 
 
 def test_suggest_microbatches_scales_with_model():
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     small = suggest_microbatches(C.get("whisper-base"), 256, 4096, mesh)
     big = suggest_microbatches(C.get("grok-1-314b"), 256, 4096, mesh)
     assert small <= big

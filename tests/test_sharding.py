@@ -2,20 +2,21 @@
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.launch import sharding as S
+from repro.launch.compat import abstract_mesh
 from repro.models.layers import LogicalParam
 
 
 @pytest.fixture
 def mesh():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture
 def pod_mesh():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_divisible_dims_shard(mesh):
