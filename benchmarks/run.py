@@ -12,6 +12,7 @@ claims; roofline rows derive from the dry-run JSONs.
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import time
@@ -254,12 +255,16 @@ def bench_communication(scale: E.Scale):
 # packed-once device-resident engine, at M mediators
 # ----------------------------------------------------------------------
 
-def bench_engine(scale: E.Scale):
+def bench_engine(scale: E.Scale, stores: tuple = ("replicated",)):
     """us_per_call = wall time per synchronization round. ``legacy`` is the
     pre-engine path (numpy (M, gamma, pad, ...) repack on the host every
     round); ``engine`` gathers from packed-once device buffers inside the
     jitted round. ``packs`` counts host packing events: 1 per schedule for
-    the engine, 1 per round for the legacy path."""
+    the engine, 1 per round for the legacy path. The ``--store`` axis
+    benchmarks the ClientStore placement policies (replicated / sharded /
+    host); ``store_bytes`` is per-device client-store residency -- on this
+    1-device container sharded matches replicated (n=1); the per-device
+    reduction shows up on real multi-device meshes."""
     import dataclasses
     import jax
     import jax.numpy as jnp
@@ -281,17 +286,27 @@ def bench_engine(scale: E.Scale):
         fed = partition(spec, num_clients=k, total_samples=k * 2 * batch,
                         test_samples=64, sizes="even", global_dist="balanced",
                         local="random", seed=0, name=f"eng{m_target}")
-        eng = FLRoundEngine(
-            model, adam(1e-3), fed,
-            EngineConfig.astraea(clients_per_round=k, gamma=gamma,
-                                 local=local, seed=0))
-        eng.run_round()                      # compile + schedule pack
-        jax.block_until_ready(eng.params)
-        t0 = time.time()
-        for _ in range(reps):
-            eng.run_round()
-        jax.block_until_ready(eng.params)
-        new_us = (time.time() - t0) / reps * 1e6
+        store_rows = {}
+        for store in stores:
+            eng = FLRoundEngine(
+                model, adam(1e-3), fed,
+                EngineConfig.astraea(clients_per_round=k, gamma=gamma,
+                                     local=local, store=store,
+                                     pad_mediators_to=m_target, seed=0))
+            eng.run_round()                  # compile + schedule pack
+            jax.block_until_ready(eng.params)
+            t0 = time.time()
+            for _ in range(reps):
+                eng.run_round()
+            jax.block_until_ready(eng.params)
+            us = (time.time() - t0) / reps * 1e6
+            store_rows[store] = {
+                "us": us, "store_bytes": eng.store.per_device_bytes(),
+                "traces": eng.num_round_traces}
+            if store == "replicated":
+                new_us = us
+        if "replicated" not in stores:
+            new_us = next(iter(store_rows.values()))["us"]
 
         # ---- legacy reference: numpy repack inside the round loop.
         # Intentionally mirrors tests/test_engine.py::_legacy_astraea_run,
@@ -343,13 +358,15 @@ def bench_engine(scale: E.Scale):
 
         _emit(f"engine/M{m_count}/legacy", old_us,
               f"pack_us={pack_us:.0f};packs_per_round=1")
-        _emit(f"engine/M{m_count}/engine", new_us,
-              f"speedup={old_us / new_us:.2f}x;"
-              f"packs={eng.num_schedule_packs};rounds={eng._round}")
+        for store, row in store_rows.items():
+            _emit(f"engine/M{m_count}/{store}", row["us"],
+                  f"speedup={old_us / row['us']:.2f}x;"
+                  f"store_bytes={row['store_bytes']};traces={row['traces']}")
         out[f"M{m_count}"] = {"legacy_us": old_us, "engine_us": new_us,
                               "pack_us": pack_us,
                               "engine_packs": eng.num_schedule_packs,
-                              "engine_rounds": eng._round}
+                              "engine_rounds": eng._round,
+                              "stores": store_rows}
     _save("engine", out)
 
 
@@ -433,14 +450,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--store", default="replicated,sharded,host",
+                    help="comma-separated ClientStore policies for the "
+                         "engine benchmark (replicated,sharded,host)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     scale = E.FULL if args.full else E.DEFAULT
     names = args.only.split(",") if args.only else list(ALL)
+    benches = dict(ALL)
+    benches["engine"] = functools.partial(
+        bench_engine, stores=tuple(args.store.split(",")))
     print("name,us_per_call,derived")
     for name in names:
         t0 = time.time()
-        ALL[name](scale)
+        benches[name](scale)
         print(f"# {name} finished in {time.time()-t0:.1f}s", flush=True)
 
 

@@ -44,6 +44,11 @@ class AstraeaTrainer:
     alpha: float | None = 0.67              # augmentation factor; None = NoAug
     use_kernel_agg: bool = False
     reschedule_every_round: bool = False    # static client data -> schedule once
+    store: str = "replicated"               # client-store placement policy
+    # padded mediator count; defaults to ceil(c / gamma) -- the exact output
+    # size of Alg. 3 -- so reschedules never re-jit the round executable
+    pad_mediators_to: int | None = None
+    mesh: object = None                     # mediator mesh; None = all devices
     seed: int = 0
     history: list[dict] = field(default_factory=list)
 
@@ -66,6 +71,8 @@ class AstraeaTrainer:
         # donate_params=False: the historical trainer API let callers keep
         # references to trainer.params across rounds; donation (the engine
         # default) would invalidate those buffers on accelerators
+        c_eff = min(self.clients_per_round, self.data.num_clients)
+        pad_m = self.pad_mediators_to or -(-c_eff // self.gamma)
         self.engine = FLRoundEngine(
             self.model, self.opt, self.data,
             EngineConfig.astraea(
@@ -73,7 +80,9 @@ class AstraeaTrainer:
                 local=self.local, mediator_epochs=self.mediator_epochs,
                 use_kernel_agg=self.use_kernel_agg,
                 reschedule_every_round=self.reschedule_every_round,
-                donate_params=False, seed=self.seed))
+                store=self.store, pad_mediators_to=pad_m,
+                donate_params=False, seed=self.seed),
+            mesh=self.mesh)
         self.history = self.engine.history
 
     # ---- historical trainer surface, delegated to the engine ----

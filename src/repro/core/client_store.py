@@ -1,0 +1,270 @@
+"""Client data placement layer: where the packed ``(K, pad, ...)`` live.
+
+The FL round engine never touches raw client arrays; it talks to a
+``ClientStore`` that owns the packed per-client buffers and knows how to
+turn a host-side gather schedule (``idx (M_pad, gamma)`` client ids +
+0/1 ``slot`` mask) into per-slot device tensors inside the shard_mapped
+round. Three placement policies trade memory for traffic:
+
+===========  ====================  =======================================
+policy       per-device bytes      per-schedule traffic
+===========  ====================  =======================================
+replicated   K * slice             none (gathers are device-local)
+sharded      ceil(K / n) * slice   all_gather of <= min(M_pad * gamma,
+                                   K_local) *scheduled* slices per shard
+host         U_cap * slice         host->device copy of the <= c unique
+             (U_cap = min(K, c))   scheduled clients, once per reschedule
+===========  ====================  =======================================
+
+``replicated`` is PR-1's behavior: every device holds the whole federation
+(fastest, but K is bounded by one device's HBM). ``sharded`` partitions
+the client axis over the ``mediator`` mesh axis: device ``d`` owns clients
+``[d * K_local, (d+1) * K_local)``; at schedule time the store remaps each
+mediator's global client ids into (a) direct reads from the local shard
+when the mediator's device owns the client and (b) positions in a
+``serve`` buffer of scheduled slices that each owner contributes to one
+``all_gather`` -- only scheduled clients ride the interconnect, never the
+store. ``host`` keeps the federation in host RAM and streams the compact
+unique-scheduled slice (padded to the static capacity ``U_cap`` so the
+round executable never re-specializes) to device once per reschedule: the
+federation only has to fit in host memory, and device residency is O(c).
+
+All three are **bit-identical**: gathers and copies move exact values, the
+round program consumes identical per-slot tensors, and the engine
+replicates the stacked mediator outputs before aggregation so the FP
+reduction order never depends on the mesh (see ``FLRoundEngine``).
+
+Locality: the ``sharded`` store routes mediator placement through
+``scheduling.place_mediators`` so each mediator lands on the shard owning
+most of its clients -- minimizing occupied ``all_gather`` slots (the
+cross-shard fetch count is surfaced in ``last_placement_stats``). The
+serve capacity is the static worst case ``min(M_pad * gamma, K_local)``,
+so reschedules at fixed M never change shapes and never re-jit.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import scheduling
+from repro.launch.mesh import mediator_sharding, replicated_sharding
+
+Arrays = Any
+
+POLICIES = ("replicated", "sharded", "host")
+
+
+def _bytes(*arrays) -> int:
+    return int(sum(a.nbytes for a in arrays))
+
+
+class ClientStore:
+    """Base policy: the engine-facing contract.
+
+    * ``data_specs`` / ``plan_specs``: PartitionSpecs for the two argument
+      groups the store feeds into the shard_mapped round body.
+    * ``place(groups, m_pad)``: assign mediators to padded schedule rows
+      (``row_to_group``, -1 = dummy); row ``r`` runs on device
+      ``r // (m_pad // n)``.
+    * ``plan(idx, slot)``: schedule-time index remapping; returns
+      ``(data_args, plan_args)`` for ``run_round``. Called once per
+      reschedule, never per round.
+    * ``slot_data(data_args, plan_args)``: traced *inside* shard_map;
+      returns this device's ``(M_local, gamma, pad, ...)`` x/y/mask
+      slot tensors (mask still unscaled by the slot mask).
+    """
+
+    policy: str
+    permutes_rows = False
+
+    def place(self, groups: list[list[int]], m_pad: int) -> np.ndarray:
+        row_to_group = np.full(m_pad, -1, np.int64)
+        row_to_group[:len(groups)] = np.arange(len(groups))
+        return row_to_group
+
+    def plan(self, idx: np.ndarray, slot: np.ndarray):
+        raise NotImplementedError
+
+    def slot_data(self, data: Arrays, plan: Arrays):
+        raise NotImplementedError
+
+    def per_device_bytes(self) -> int:
+        raise NotImplementedError
+
+
+class ReplicatedStore(ClientStore):
+    """PR-1 behavior: the full packed store on every device."""
+
+    policy = "replicated"
+    data_specs = (P(), P(), P())
+    plan_specs = (P("mediator"),)
+
+    def __init__(self, xs, ys, mask, mesh):
+        rep = replicated_sharding(mesh)
+        self._x = jax.device_put(jnp.asarray(xs), rep)
+        self._y = jax.device_put(jnp.asarray(ys), rep)
+        self._m = jax.device_put(jnp.asarray(mask), rep)
+
+    def plan(self, idx, slot):
+        return (self._x, self._y, self._m), (jnp.asarray(idx),)
+
+    def slot_data(self, data, plan):
+        x_all, y_all, m_all = data
+        (idx,) = plan
+        return x_all[idx], y_all[idx], m_all[idx]
+
+    def per_device_bytes(self) -> int:
+        return _bytes(self._x, self._y, self._m)
+
+
+class ShardedStore(ClientStore):
+    """Client axis partitioned over the ``mediator`` mesh axis.
+
+    Schedule-time remapping (``plan``) splits every active slot ``(r, g)``
+    into *local* (client owned by row ``r``'s device: read straight from
+    the shard at ``lpos``) or *remote* (the owner appends the client --
+    deduplicated -- to its ``serve`` list; the slot reads the
+    ``all_gather``-ed serve buffers at ``rpos``). Serve lists are padded
+    to the static capacity ``F = min(M_pad * gamma, K_local)`` -- a device
+    can never serve more distinct clients than it owns, nor more than the
+    schedule holds -- so the gather program is shape-stable across
+    reschedules.
+    """
+
+    policy = "sharded"
+    permutes_rows = True
+    data_specs = (P("mediator"), P("mediator"), P("mediator"))
+    plan_specs = (P("mediator"), P("mediator"), P("mediator"), P("mediator"))
+
+    def __init__(self, xs, ys, mask, mesh):
+        self._n = int(mesh.shape["mediator"])
+        k = xs.shape[0]
+        k_pad = ((k + self._n - 1) // self._n) * self._n
+        if k_pad > k:                       # dummy clients: zero mask rows
+            grow = lambda a: np.concatenate(
+                [a, np.zeros((k_pad - k,) + a.shape[1:], a.dtype)])
+            xs, ys, mask = grow(xs), grow(ys), grow(mask)
+        self._k_local = k_pad // self._n
+        shard = mediator_sharding(mesh)
+        self._x = jax.device_put(jnp.asarray(xs), shard)
+        self._y = jax.device_put(jnp.asarray(ys), shard)
+        self._m = jax.device_put(jnp.asarray(mask), shard)
+        self.last_placement_stats: dict | None = None
+
+    def owner(self, cid: int) -> int:
+        return cid // self._k_local
+
+    def place(self, groups, m_pad):
+        row_to_group, stats = scheduling.place_mediators(
+            groups, self._n, m_pad // self._n, self.owner)
+        self.last_placement_stats = stats
+        return row_to_group
+
+    def plan(self, idx, slot):
+        m_pad, gamma = idx.shape
+        m_local = m_pad // self._n
+        f = max(1, min(m_pad * gamma, self._k_local))
+        serve = np.zeros((self._n, f), np.int32)
+        served: dict[int, tuple[int, int]] = {}   # cid -> (owner, slot)
+        fill = [0] * self._n
+        loc = np.ones((m_pad, gamma), bool)       # inactive slots: local row 0
+        lpos = np.zeros((m_pad, gamma), np.int32)
+        rpos = np.zeros((m_pad, gamma), np.int32)
+        for r, g in np.argwhere(slot > 0):
+            cid = int(idx[r, g])
+            own = self.owner(cid)
+            if own == r // m_local:
+                lpos[r, g] = cid % self._k_local
+                continue
+            if cid not in served:
+                served[cid] = (own, fill[own])
+                serve[own, fill[own]] = cid % self._k_local
+                fill[own] += 1
+            own, j = served[cid]
+            loc[r, g] = False
+            rpos[r, g] = own * f + j
+        if self.last_placement_stats is not None:
+            self.last_placement_stats["serve_capacity"] = int(self._n * f)
+            self.last_placement_stats["serve_occupied"] = int(sum(fill))
+        return ((self._x, self._y, self._m),
+                (jnp.asarray(serve), jnp.asarray(loc), jnp.asarray(lpos),
+                 jnp.asarray(rpos)))
+
+    def slot_data(self, data, plan):
+        serve, loc, lpos, rpos = plan
+        srv = serve.reshape(-1)                   # this device's (F,) serve list
+
+        def pick(shard):
+            gathered = jax.lax.all_gather(shard[srv], "mediator", tiled=True)
+            local = shard[lpos]                   # (M_local, gamma, pad, ...)
+            remote = gathered[rpos]
+            sel = loc.reshape(loc.shape + (1,) * (local.ndim - 2))
+            return jnp.where(sel, local, remote)
+
+        return tuple(pick(a) for a in data)
+
+    def per_device_bytes(self) -> int:
+        return _bytes(self._x, self._y, self._m) // self._n
+
+
+class HostStore(ClientStore):
+    """Host-RAM federation; per-schedule slices streamed to device.
+
+    The packed store never leaves the host. Each reschedule device_puts
+    the <= ``U_cap`` *unique* scheduled clients (padded to the static
+    capacity so shapes, and hence the compiled round, are stable) and
+    remaps the gather indices into that compact buffer -- the round then
+    runs exactly like the replicated store over the small slice.
+    """
+
+    policy = "host"
+    data_specs = (P(), P(), P())
+    plan_specs = (P("mediator"),)
+
+    def __init__(self, xs, ys, mask, mesh, capacity):
+        self._xs, self._ys, self._mask = xs, ys, mask   # host numpy
+        self._cap = max(1, min(xs.shape[0], capacity))
+        self._rep = replicated_sharding(mesh)
+        self._streamed_bytes = 0
+
+    def plan(self, idx, slot):
+        uniq = np.unique(idx[slot > 0])
+        if uniq.size > self._cap:
+            raise ValueError(f"schedule touches {uniq.size} unique clients; "
+                             f"host store capacity is {self._cap}")
+        remap = np.zeros(self._xs.shape[0], np.int32)
+        remap[uniq] = np.arange(uniq.size, dtype=np.int32)
+        idx_c = np.where(slot > 0, remap[idx], 0).astype(np.int32)
+
+        def stream(a):
+            out = np.zeros((self._cap,) + a.shape[1:], a.dtype)
+            out[:uniq.size] = a[uniq]
+            return jax.device_put(jnp.asarray(out), self._rep)
+
+        data = (stream(self._xs), stream(self._ys), stream(self._mask))
+        self._streamed_bytes += _bytes(*data)
+        return data, (jnp.asarray(idx_c),)
+
+    slot_data = ReplicatedStore.slot_data
+
+    def per_device_bytes(self) -> int:
+        slice_bytes = _bytes(self._xs[:1], self._ys[:1], self._mask[:1])
+        return self._cap * slice_bytes
+
+
+def build_client_store(policy: str, xs, ys, mask, mesh, *,
+                       capacity: int | None = None) -> ClientStore:
+    """Build the packed client store under ``policy`` (see module docstring)."""
+    if policy == "replicated":
+        return ReplicatedStore(xs, ys, mask, mesh)
+    if policy == "sharded":
+        return ShardedStore(xs, ys, mask, mesh)
+    if policy == "host":
+        return HostStore(xs, ys, mask, mesh,
+                         capacity if capacity is not None else xs.shape[0])
+    raise ValueError(f"unknown client-store policy {policy!r}; "
+                     f"expected one of {POLICIES}")

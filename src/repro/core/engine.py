@@ -11,29 +11,60 @@ One engine drives both algorithms in this repo:
 
 What makes it an engine rather than a trainer loop:
 
-1. **Pack once.** The padded per-client arrays ``(K, pad, ...)`` are moved
-   to device at construction. A schedule is a tiny ``(M, gamma)`` int32
-   gather index plus a 0/1 slot mask; ``run_round`` never rebuilds host
-   numpy buffers (the old trainers re-packed ``(M, gamma, pad, ...)`` on
-   the host every round). Gathering ``x_all[idx]`` happens on device
-   inside the jitted round. Slot-mask zeros make empty client slots exact
-   no-ops (masked loss is 0 => zero grads => zero Adam updates), so a
-   dummy slot may harmlessly gather client 0's data.
+1. **Pack once, place by policy.** The padded per-client arrays
+   ``(K, pad, ...)`` are packed at construction into a ``ClientStore``
+   (``core/client_store.py``) under one of three placement policies:
+
+   * ``replicated`` -- the whole store on every device. Fastest gathers;
+     per-device bytes = K * slice, so K is bounded by one device's HBM.
+   * ``sharded`` -- client axis partitioned over the ``mediator`` mesh
+     axis (per-device bytes = K/n * slice). Each mediator's ``x_all[idx]``
+     gather is routed at schedule time: locally-owned clients read from
+     the device's shard; remote ones ride one ``all_gather`` of only the
+     *scheduled* slices (capacity ``min(M_pad * gamma, K_local)``, static
+     across reschedules). Mediator rows are placed by the locality pass
+     ``scheduling.place_mediators`` to minimize cross-shard fetches.
+   * ``host`` -- the federation stays in host RAM (per-device bytes =
+     min(K, c) * slice); the unique scheduled clients are streamed to
+     device once per reschedule into a fixed-capacity compact buffer.
+
+   A schedule is a tiny ``(M, gamma)`` int32 gather index plus a 0/1 slot
+   mask; ``run_round`` never rebuilds host buffers (the old trainers
+   re-packed ``(M, gamma, pad, ...)`` on the host every round). Slot-mask
+   zeros make empty client slots exact no-ops (masked loss is 0 => zero
+   grads => zero Adam updates), so a dummy slot may harmlessly gather any
+   resident row.
 2. **Mediator sharding.** Mediators are distributed over the ``mediator``
    axis of a device mesh via shard_map; ``M`` is padded up to the mesh
    size with zero-weight dummy mediators (also exact no-ops). On a 1-device
    CPU mesh this degrades to plain vmap semantics bit-for-bit.
-3. **Donated params.** The round executable receives the parameter buffer
+3. **Fixed-M compilation.** ``pad_mediators_to`` fixes the padded mediator
+   count across reschedules (the trainers default it to ``ceil(c/gamma)``),
+   and every store keeps its plan shapes static, so the round executable
+   is traced exactly once per engine no matter how often the KLD schedule
+   changes -- ``num_round_traces`` counts traces and is asserted in tests.
+4. **Donated params.** The round executable receives the parameter buffer
    with ``donate_argnums`` so the server-side update is in-place on
    accelerators.
-4. **Kernel aggregation.** ``use_kernel_agg`` routes Eq. 6 through the
+5. **Kernel aggregation.** ``use_kernel_agg`` routes Eq. 6 through the
    ``fedavg_agg`` Pallas kernel (interpret-mode on CPU, Mosaic on TPU);
    default is the pure-jnp ``weighted_average`` (same math, XLA-fused).
 
-RNG note: per-round keys are split at the *real* mediator count before
-dummy-mediator padding (``jax.random.split`` is not prefix-stable), so the
-trajectory is independent of the mesh size and bit-identical to the
-pre-engine trainers on a single device.
+Bit-identity guarantees: every store feeds identical per-slot values into
+identical per-row programs (gathers move exact bits), the sharded store's
+locality permutation is undone before aggregation (``unperm``), and the
+stacked outputs are constrained to replicated sharding first, so the
+Eq. 6 reduction always runs in single-device order. Hence at any FIXED
+mesh size the three stores produce bitwise-identical trajectories. Across
+*different* mesh sizes, XLA's batched kernels are not bit-stable in the
+vmap batch width, so the default ``row_exec="vmap"`` matches only to fp
+tolerance; ``row_exec="map"`` runs rows through a batch-size-invariant
+program and is bitwise identical across any mesh size and store
+combination (asserted in tests/test_client_store.py). RNG note: per-round
+keys are split at the *real* mediator count before dummy-row padding
+(``jax.random.split`` is not prefix-stable) and follow mediators through
+placement, so the trajectory is independent of placement policy, and
+bit-identical to the pre-engine trainers on a single device.
 """
 from __future__ import annotations
 
@@ -46,13 +77,14 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import scheduling
+from repro.core.client_store import POLICIES, build_client_store
 from repro.core.comm import CommMeter
 from repro.core.fl import (LocalSpec, evaluate, make_client_update,
                            weighted_average)
 from repro.core.mediator import make_mediator_update
 from repro.data.federated import FederatedDataset
 from repro.launch.compat import shard_map
-from repro.launch.mesh import make_mediator_mesh
+from repro.launch.mesh import make_mediator_mesh, replicated_sharding
 from repro.models.cnn import Model, count_params
 from repro.optim.optimizers import Optimizer
 
@@ -73,6 +105,13 @@ class EngineConfig:
     mediator_epochs: int = 1                # E_m
     schedule: str = "kld"                   # "kld" (Alg. 3) | "random"
     aggregate: str = "delta"                # "delta" (Astraea) | "weights" (FedAvg)
+    store: str = "replicated"               # client-store placement policy
+    # per-device mediator-row execution: "vmap" vectorizes rows (fastest on
+    # few devices), "map" runs them serially with a batch-size-invariant
+    # program, making trajectories bit-identical across ANY mesh size (XLA
+    # batching picks different reduction strategies per batch size, so vmap
+    # is only bit-stable at a fixed mesh; see tests/test_client_store.py)
+    row_exec: str = "vmap"
     use_kernel_agg: bool = False
     reschedule_every_round: bool = False
     donate_params: bool = True
@@ -86,6 +125,11 @@ class EngineConfig:
             raise ValueError(f"unknown schedule {self.schedule!r}")
         if self.aggregate not in ("delta", "weights"):
             raise ValueError(f"unknown aggregate {self.aggregate!r}")
+        if self.store not in POLICIES:
+            raise ValueError(f"unknown client-store policy {self.store!r}; "
+                             f"expected one of {POLICIES}")
+        if self.row_exec not in ("vmap", "map"):
+            raise ValueError(f"unknown row_exec {self.row_exec!r}")
         if self.aggregate == "weights" and self.gamma != 1:
             raise ValueError("weight aggregation implies gamma=1 (FedAvg)")
         if self.pad_mediators_to is not None and self.pad_mediators_to < 1:
@@ -120,25 +164,26 @@ class FLRoundEngine:
 
         sizes = [x.shape[0] for x in data.client_images]
         pad = _pad_multiple(max(sizes), cfg.local.batch_size)
-        # packed ONCE: device-resident (K, pad, ...) buffers + masks
+        # packed ONCE into the placement-policy store (replicated buffers,
+        # client-sharded buffers, or host RAM -- see core/client_store.py)
         xs, ys, mask = data.padded(pad)
-        self._x = jnp.asarray(xs)
-        self._y = jnp.asarray(ys)
-        self._mask = jnp.asarray(mask)
+        self.store = build_client_store(
+            cfg.store, xs, ys, mask, self.mesh,
+            capacity=min(cfg.clients_per_round, data.num_clients))
         self._counts = data.client_counts()
         self._rng = np.random.default_rng(cfg.seed)
 
         # commit params to the replicated mesh sharding up front: round
         # outputs carry it, so an uncommitted init would cache-miss the
         # round executable once (a full recompile) on the second round
-        from jax.sharding import NamedSharding
-        replicated = NamedSharding(self.mesh, P())
+        replicated = replicated_sharding(self.mesh)
         self.params = jax.device_put(model.init(jax.random.PRNGKey(cfg.seed)),
                                      replicated)
         self.comm = CommMeter(count_params(self.params))
         self.history: list[dict] = []
         self.last_schedule_stats: dict | None = None
         self.num_schedule_packs = 0             # host packing events (bench)
+        self.num_round_traces = 0               # round_fn (re)compilations
         self._schedule: tuple | None = None
         self._round = 0
         self._round_fn = self._build_round_fn(loss_fn)
@@ -147,7 +192,7 @@ class FLRoundEngine:
     # round program
     # ------------------------------------------------------------------
     def _build_round_fn(self, loss_fn):
-        cfg = self.cfg
+        cfg, store = self.cfg, self.store
         parallel_clients = cfg.aggregate == "weights"
         if parallel_clients:
             client_update = make_client_update(self.model, self.opt, cfg.local,
@@ -158,28 +203,42 @@ class FLRoundEngine:
                                                    cfg.mediator_epochs,
                                                    loss_fn=loss_fn)
         P_med = P("mediator")
+        replicated = replicated_sharding(self.mesh)
 
-        def _train(params, x_all, y_all, m_all, idx, slot, keys):
-            # idx/slot/keys arrive as this device's (M_local, ...) shard;
-            # x_all/y_all/m_all are the replicated client store.
+        def _rows(fn, params, *batched):
+            if cfg.row_exec == "map":
+                return jax.lax.map(lambda args: fn(params, *args), batched)
+            return jax.vmap(fn, in_axes=(None,) + (0,) * len(batched))(
+                params, *batched)
+
+        def _train(params, data, plan, slot, keys):
+            # plan/slot/keys arrive as this device's (M_local, ...) shards;
+            # the store resolves them against its resident client buffers.
+            xs, ys, ms_raw = store.slot_data(data, plan)
             if parallel_clients:
-                cid = idx[:, 0]
-                ms = m_all[cid] * slot[:, :1]
-                outs = jax.vmap(client_update, in_axes=(None, 0, 0, 0, 0))(
-                    params, x_all[cid], y_all[cid], ms, keys)
+                ms = ms_raw[:, 0] * slot[:, :1]
+                outs = _rows(client_update, params, xs[:, 0], ys[:, 0], ms,
+                             keys)
                 return outs, ms.sum(axis=1)
-            ms = m_all[idx] * slot[..., None]
-            outs = jax.vmap(mediator_update, in_axes=(None, 0, 0, 0, 0))(
-                params, x_all[idx], y_all[idx], ms, keys)
+            ms = ms_raw * slot[..., None]
+            outs = _rows(mediator_update, params, xs, ys, ms, keys)
             return outs, ms.sum(axis=(1, 2))
 
         train = shard_map(_train, self.mesh,
-                          in_specs=(P(), P(), P(), P(), P_med, P_med, P_med),
+                          in_specs=(P(), store.data_specs, store.plan_specs,
+                                    P_med, P_med),
                           out_specs=(P_med, P_med), manual_axes=("mediator",))
 
-        def round_fn(params, x_all, y_all, m_all, idx, slot, keys):
-            stacked, weights = train(params, x_all, y_all, m_all,
-                                     idx, slot, keys)
+        def round_fn(params, data, plan, unperm, slot, keys):
+            self.num_round_traces += 1          # python: counts (re)traces
+            stacked, weights = train(params, data, plan, slot, keys)
+            if store.permutes_rows:             # undo locality placement
+                stacked = jax.tree.map(lambda a: a[unperm], stacked)
+                weights = weights[unperm]
+            # replicate the (M, ...) stack before Eq. 6 so the reduction
+            # order (and hence the result, bitwise) is mesh-independent
+            stacked = jax.lax.with_sharding_constraint(stacked, replicated)
+            weights = jax.lax.with_sharding_constraint(weights, replicated)
             agg = self._aggregate(stacked, weights)
             if parallel_clients:
                 return agg
@@ -216,7 +275,15 @@ class FLRoundEngine:
         raise ValueError(f"unknown schedule {cfg.schedule!r}")
 
     def _pack_schedule(self, sel: np.ndarray) -> tuple:
-        """Schedule -> device-resident gather plan: (idx, slot, m_real)."""
+        """Schedule -> store-routed gather plan.
+
+        Packs the client groups into padded ``(M_pad, gamma)`` rows (rows
+        assigned by the store's placement pass), remaps the gather through
+        the store, and precomputes ``unperm`` -- the row order that puts
+        stacked outputs back in schedule order before aggregation (real
+        mediators first, dummies last), which is what keeps every
+        placement bit-identical to the replicated path.
+        """
         groups = self._groups_for(sel)
         m_real = len(groups)
         m_pad = self.cfg.pad_mediators_to or m_real
@@ -225,23 +292,35 @@ class FLRoundEngine:
                 f"pad_mediators_to={m_pad} smaller than the schedule "
                 f"({m_real} mediators)")
         m_pad = _pad_multiple(m_pad, self._msize)
+        row_to_group = self.store.place(groups, m_pad)
         idx = np.zeros((m_pad, self.cfg.gamma), np.int32)
         slot = np.zeros((m_pad, self.cfg.gamma), np.float32)
-        for mi, clients in enumerate(groups):
-            for ci, cid in enumerate(clients):
-                idx[mi, ci] = cid
-                slot[mi, ci] = 1.0
+        row_of = np.zeros(m_real, np.int64)
+        for r, g in enumerate(row_to_group):
+            if g < 0:
+                continue
+            row_of[g] = r
+            for ci, cid in enumerate(groups[g]):
+                idx[r, ci] = cid
+                slot[r, ci] = 1.0
+        dummy_rows = np.flatnonzero(row_to_group < 0)
+        unperm = np.concatenate([row_of, dummy_rows]).astype(np.int32)
+        data_args, plan_args = self.store.plan(idx, slot)
+        if getattr(self.store, "last_placement_stats", None):
+            self.last_schedule_stats = {**(self.last_schedule_stats or {}),
+                                        **self.store.last_placement_stats}
         self.num_schedule_packs += 1
-        return jnp.asarray(idx), jnp.asarray(slot), m_real
+        return (data_args, plan_args, jnp.asarray(unperm),
+                jnp.asarray(slot), row_to_group, m_real)
 
-    def _round_keys(self, m_real: int, m_pad: int) -> jax.Array:
+    def _round_keys(self, row_to_group: np.ndarray, m_real: int) -> jax.Array:
         base = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed + 1),
                                   self._round)
-        keys = jax.random.split(base, m_real)
-        if m_pad > m_real:  # dummy mediators: any key is a no-op
-            pad = jnp.zeros((m_pad - m_real,) + keys.shape[1:], keys.dtype)
-            keys = jnp.concatenate([keys, pad])
-        return keys
+        keys = jax.random.split(base, m_real)   # split at the REAL count
+        take = np.where(row_to_group >= 0, row_to_group, 0)
+        rows = jnp.asarray(keys)[jnp.asarray(take)]
+        real = jnp.asarray(row_to_group >= 0)   # dummy rows: any key no-ops
+        return jnp.where(real[:, None], rows, jnp.zeros_like(rows))
 
     # ------------------------------------------------------------------
     # driving
@@ -252,10 +331,10 @@ class FLRoundEngine:
         if cfg.reschedule_every_round or self._schedule is None:
             sel = self._rng.choice(self.data.num_clients, size=c, replace=False)
             self._schedule = self._pack_schedule(sel)
-        idx, slot, m_real = self._schedule
-        keys = self._round_keys(m_real, idx.shape[0])
-        self.params = self._round_fn(self.params, self._x, self._y, self._mask,
-                                     idx, slot, keys)
+        data_args, plan_args, unperm, slot, row_to_group, m_real = self._schedule
+        keys = self._round_keys(row_to_group, m_real)
+        self.params = self._round_fn(self.params, data_args, plan_args,
+                                     unperm, slot, keys)
         if cfg.aggregate == "weights":
             self.comm.fedavg_round(c)
         else:
@@ -269,7 +348,8 @@ class FLRoundEngine:
                 m = evaluate(self.model, self.params,
                              self.data.test_images, self.data.test_labels)
                 m.update(round=self._round, traffic_mb=self.comm.megabytes)
-                if self.last_schedule_stats:
+                if self.last_schedule_stats and \
+                        "kld_mean" in self.last_schedule_stats:
                     m["mediator_kld_mean"] = self.last_schedule_stats["kld_mean"]
                 self.history.append(m)
         return self.history

@@ -26,6 +26,11 @@ class FedAvgTrainer:
     data: FederatedDataset
     clients_per_round: int           # c
     local: LocalSpec                 # B, E
+    store: str = "replicated"        # client-store placement policy
+    # padded mediator count; defaults to c (gamma=1) so the per-round
+    # random reschedule never re-jits the round executable
+    pad_mediators_to: int | None = None
+    mesh: object = None              # mediator mesh; None = all devices
     seed: int = 0
     loss_fn: object = None           # optional custom local loss
     history: list[dict] = field(default_factory=list)
@@ -33,12 +38,15 @@ class FedAvgTrainer:
     def __post_init__(self):
         # donate_params=False: see AstraeaTrainer -- historical callers may
         # hold references to trainer.params across rounds
+        pad_m = self.pad_mediators_to or \
+            min(self.clients_per_round, self.data.num_clients)
         self.engine = FLRoundEngine(
             self.model, self.opt, self.data,
             EngineConfig.fedavg(clients_per_round=self.clients_per_round,
-                                local=self.local, donate_params=False,
+                                local=self.local, store=self.store,
+                                pad_mediators_to=pad_m, donate_params=False,
                                 seed=self.seed),
-            loss_fn=self.loss_fn)
+            mesh=self.mesh, loss_fn=self.loss_fn)
         self.history = self.engine.history
 
     # ---- historical trainer surface, delegated to the engine ----

@@ -85,17 +85,26 @@ class FederatedDataset:
         return out
 
     def padded(self, pad_to: int | None = None):
-        """Stack clients into (K, pad, ...) arrays + (K, pad) masks."""
+        """Stack clients into (K, pad, ...) arrays + (K, pad) masks.
+
+        Raises ``ValueError`` if ``pad_to`` is smaller than the largest
+        client -- silently truncating samples would corrupt the federation
+        (the old behavior dropped the tail without warning).
+        """
         sizes = [x.shape[0] for x in self.client_images]
         pad = pad_to or max(sizes)
+        if pad < max(sizes):
+            raise ValueError(
+                f"pad_to={pad} would truncate clients: the largest client "
+                f"holds {max(sizes)} samples; pass pad_to >= {max(sizes)}")
         sample_shape = self.client_images[0].shape[1:]
         xs = np.zeros((self.num_clients, pad) + sample_shape, np.float32)
         ys = np.zeros((self.num_clients, pad), np.int32)
         mask = np.zeros((self.num_clients, pad), np.float32)
         for k, (x, y) in enumerate(zip(self.client_images, self.client_labels)):
-            n = min(x.shape[0], pad)
-            xs[k, :n] = x[:n]
-            ys[k, :n] = y[:n]
+            n = x.shape[0]
+            xs[k, :n] = x
+            ys[k, :n] = y
             mask[k, :n] = 1.0
         return xs, ys, mask
 

@@ -14,6 +14,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import fedavg_agg as _fa
 from repro.kernels import flash_attention as _fl
@@ -33,13 +34,41 @@ def fedavg_agg(deltas: jax.Array, weights: jax.Array, **kw) -> jax.Array:
     return _fa.fedavg_agg(deltas, weights, **kw)
 
 
-def fedavg_agg_tree(deltas_tree: PyTree, weights: jax.Array, **kw) -> PyTree:
-    """Apply Eq. 6 leafwise to a stacked (M, ...) parameter pytree."""
-    def leaf(d):
-        m = d.shape[0]
-        flat = d.reshape(m, -1)
-        return fedavg_agg(flat, weights, **kw).reshape(d.shape[1:])
-    return jax.tree.map(leaf, deltas_tree)
+def fedavg_agg_tree(deltas_tree: PyTree, weights: jax.Array, *,
+                    fuse: bool | None = None, **kw) -> PyTree:
+    """Apply Eq. 6 to a stacked (M, ...) parameter pytree.
+
+    ``fuse=True`` flattens every leaf into one ``(M, total_params)`` buffer
+    and runs a single kernel launch over it -- one grid, one pass over HBM,
+    no per-leaf ragged tails (ROADMAP "kernel aggregation at scale"). Each
+    column is reduced independently, so the result is bitwise identical to
+    the per-leaf path on a uniform-dtype tree. Default: fused on real TPUs,
+    per-leaf in interpret mode (CPU), where the fused python-loop grid over
+    the concatenated buffer is slower than XLA's per-leaf fusion. A
+    mixed-dtype tree auto-falls back to per-leaf (concatenation would
+    promote and change the reduction dtype); an explicit ``fuse=True``
+    overrides that and accepts the promotion.
+    """
+    kw.setdefault("interpret", _interpret())
+    if fuse is None:
+        uniform = len({l.dtype for l in jax.tree.leaves(deltas_tree)}) <= 1
+        fuse = uniform and not kw["interpret"]
+    if not fuse:
+        def leaf(d):
+            m = d.shape[0]
+            flat = d.reshape(m, -1)
+            return fedavg_agg(flat, weights, **kw).reshape(d.shape[1:])
+        return jax.tree.map(leaf, deltas_tree)
+    leaves, treedef = jax.tree.flatten(deltas_tree)
+    m = leaves[0].shape[0]
+    sizes = [int(np.prod(l.shape[1:])) for l in leaves]
+    flat = jnp.concatenate([l.reshape(m, -1) for l in leaves], axis=1)
+    agg = fedavg_agg(flat, weights, **kw)               # (total_params,)
+    outs, start = [], 0
+    for l, size in zip(leaves, sizes):
+        outs.append(agg[start:start + size].reshape(l.shape[1:]).astype(l.dtype))
+        start += size
+    return jax.tree.unflatten(treedef, outs)
 
 
 def kld_score(mediator_counts: jax.Array, client_counts: jax.Array, **kw) -> jax.Array:

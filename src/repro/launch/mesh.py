@@ -38,3 +38,22 @@ def make_mediator_mesh(num_devices: int | None = None):
 def data_axes(mesh) -> tuple[str, ...]:
     """Mesh axes that carry the batch: ("pod","data") or ("data",)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def replicated_sharding(mesh):
+    """Every device holds the full array (params, small plan tensors)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def mediator_sharding(mesh):
+    """Leading axis split over the ``mediator`` mesh axis.
+
+    Used both for per-mediator round tensors (schedules, keys) and for the
+    *client* axis of a ``sharded`` ClientStore: clients are partitioned into
+    contiguous blocks of ``K_pad // n`` rows, so device ``d`` owns clients
+    ``[d * K_local, (d + 1) * K_local)`` (the owner map the store's
+    schedule-time remapping relies on).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec("mediator"))

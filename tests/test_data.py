@@ -71,6 +71,19 @@ def test_no_identical_samples_across_clients():
             hashes.add(h)
 
 
+def test_padded_rejects_truncating_pad_to():
+    """pad_to smaller than the largest client must raise, not silently drop
+    samples (the old behavior truncated the tail without warning)."""
+    fed = partition(SPEC, num_clients=6, total_samples=300, test_samples=30,
+                    sizes="instagram", seed=4)
+    largest = max(x.shape[0] for x in fed.client_images)
+    with pytest.raises(ValueError, match="truncate"):
+        fed.padded(largest - 1)
+    xs, ys, mask = fed.padded(largest)           # exact fit is fine
+    assert xs.shape[1] == largest
+    assert mask.sum() == sum(x.shape[0] for x in fed.client_images)
+
+
 def test_synthetic_task_learnable_structure():
     """Same-class samples are closer to their prototype than to others."""
     task = SyntheticTask(SPEC, seed=3)

@@ -102,11 +102,18 @@ def _legacy_fedavg_run(model, opt, data, *, c, local, seed, rounds):
 
 def test_packed_once_bit_identical_to_per_round_repacking(model,
                                                           tiny_federation):
-    """(a) Device-resident gather plan == host numpy repacking, bitwise."""
+    """(a) Device-resident gather plan == host numpy repacking, bitwise.
+
+    Pinned to a 1-device mesh: the legacy reference is a single-device
+    vmap, and XLA batched kernels are only bit-stable at a fixed batch
+    width (multi-device equivalence is covered, with its own exactness
+    story, in test_client_store.py)."""
+    from repro.launch.mesh import make_mediator_mesh
     eng = FLRoundEngine(
         model, adam(1e-3), tiny_federation,
         EngineConfig.astraea(clients_per_round=6, gamma=3,
-                             local=LocalSpec(10, 1), seed=0))
+                             local=LocalSpec(10, 1), seed=0),
+        mesh=make_mediator_mesh(1))
     for _ in range(2):
         eng.run_round()
     expect = _legacy_astraea_run(model, adam(1e-3), tiny_federation,
@@ -119,11 +126,14 @@ def test_packed_once_bit_identical_to_per_round_repacking(model,
 
 def test_astraea_trainer_matches_pre_refactor_run(model, tiny_federation):
     """(b) Engine-backed AstraeaTrainer == pre-refactor trainer, 2 rounds
-    (through the augmentation phase: the reference consumes tr.data)."""
+    (through the augmentation phase: the reference consumes tr.data).
+    1-device mesh: the reference is a single-device vmap (see (a))."""
     from repro.core.astraea import AstraeaTrainer
+    from repro.launch.mesh import make_mediator_mesh
     tr = AstraeaTrainer(model, adam(1e-3), tiny_federation,
                         clients_per_round=6, gamma=3, local=LocalSpec(10, 1),
-                        mediator_epochs=2, alpha=0.67, seed=0)
+                        mediator_epochs=2, alpha=0.67, seed=0,
+                        mesh=make_mediator_mesh(1))
     tr.run_round()
     tr.run_round()
     expect = _legacy_astraea_run(model, adam(1e-3), tr.data,
@@ -137,11 +147,13 @@ def test_astraea_trainer_matches_pre_refactor_run(model, tiny_federation):
 
 def test_fedavg_is_gamma1_engine_config(model, tiny_federation):
     """(c) FedAvg == the gamma=1 singleton-schedule engine configuration."""
+    from repro.launch.mesh import make_mediator_mesh
     cfg = EngineConfig.fedavg(clients_per_round=4, local=LocalSpec(10, 1),
                               seed=0)
     assert cfg.gamma == 1 and cfg.schedule == "random" \
         and cfg.aggregate == "weights"
-    eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg)
+    eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                        mesh=make_mediator_mesh(1))
     for _ in range(2):
         eng.run_round()
     expect = _legacy_fedavg_run(model, adam(1e-3), tiny_federation,

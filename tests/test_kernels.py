@@ -36,6 +36,21 @@ def test_fedavg_agg_tree_shapes(key):
         np.testing.assert_allclose(np.asarray(o), np.asarray(e), rtol=1e-5)
 
 
+def test_fedavg_agg_tree_fused_matches_per_leaf(key):
+    """The single flattened (M, total_params) launch == the per-leaf path,
+    bitwise: each column reduces independently, fusion only changes tiling."""
+    tree = {"w1": jax.random.normal(key, (4, 6, 3)),
+            "b1": jax.random.normal(jax.random.fold_in(key, 1), (4, 3)),
+            "w2": jax.random.normal(jax.random.fold_in(key, 2), (4, 129))}
+    w = jnp.asarray([3.0, 0.0, 1.5, 7.0])
+    per_leaf = ops.fedavg_agg_tree(tree, w, fuse=False, block_n=128)
+    fused = ops.fedavg_agg_tree(tree, w, fuse=True, block_n=128)
+    assert jax.tree.structure(per_leaf) == jax.tree.structure(fused)
+    for o, e in zip(jax.tree.leaves(fused), jax.tree.leaves(per_leaf)):
+        assert o.shape == e.shape and o.dtype == e.dtype
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(e))
+
+
 @given(k=st.integers(1, 300), c=st.integers(2, 64))
 @settings(max_examples=25, deadline=None)
 def test_kld_score_matches_ref(k, c):
