@@ -371,6 +371,96 @@ def bench_engine(scale: E.Scale, stores: tuple = ("replicated",)):
 
 
 # ----------------------------------------------------------------------
+# Async aggregation: sync barrier vs bounded-staleness waves under a
+# 4x straggler (simulated round time + rounds-to-accuracy)
+# ----------------------------------------------------------------------
+
+def bench_async(scale: E.Scale):
+    """Bounded-staleness async rounds (core/async_engine.py) vs the
+    synchronous barrier on the same simulated straggler fleet (one slot
+    4x slow). ``us_per_call`` is host wall-time per round (the simulator
+    executes every wave, so it is NOT the deployment win); the deployment
+    numbers live in ``derived``: ``round_speedup`` is barrier time /
+    async virtual time per round, and ``tta_speedup`` is the Table-III
+    style metric -- simulated time for async to reach the sync run's
+    final accuracy minus ACC_TOL (async rounds are cheaper, so it may run
+    up to 2x as many). Acceptance bar: tta_speedup >= 1.5x at S=1 under
+    the 4x straggler."""
+    from repro.core import LocalSpec
+    from repro.core.async_engine import AsyncRoundEngine, AsyncSpec
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    from repro.core.staleness import StragglerSpec
+    from repro.optim import adam
+
+    ACC_TOL = 0.05
+    rounds, eval_every = scale.rounds, 2
+    spec = E.emnist_spec(scale)
+    model = E.model_for(spec, scale)
+    fed = E.make_fed(spec, scale, name="async")
+    gamma = scale.gamma // 2 or 1
+    cfg = EngineConfig.astraea(clients_per_round=scale.c, gamma=gamma,
+                               local=LocalSpec(scale.batch, 1), seed=0)
+    straggler = StragglerSpec(model="fixed", straggler_frac=0.25,
+                              slowdown=4.0, seed=0)
+
+    t0 = time.time()
+    sync = FLRoundEngine(model, adam(1e-3), fed, cfg)
+    sh = sync.fit(rounds, eval_every=eval_every)
+    sync_us = (time.time() - t0) / rounds * 1e6
+    target = sh[-1]["accuracy"] - ACC_TOL
+    out = {"rounds": rounds, "straggler_slowdown": straggler.slowdown,
+           "acc_tol": ACC_TOL, "target_accuracy": target,
+           "sync": {"accuracy": sh[-1]["accuracy"],
+                    "traffic_mb": sh[-1]["traffic_mb"]}}
+    sync_sim_time = None        # the S=0 arm's barrier clock (same fleet)
+
+    for s_bound in (0, 1, 2):
+        eng = FLRoundEngine(model, adam(1e-3), fed, cfg)
+        a = AsyncRoundEngine(eng, AsyncSpec(staleness_bound=s_bound,
+                                            wave_size=1,
+                                            straggler=straggler))
+        # S=0 is the bitwise-sync control (same rounds); bounded-staleness
+        # runs get the same simulated-time budget expressed in their own
+        # cheaper rounds (up to 2x as many)
+        arounds = rounds if s_bound == 0 else 2 * rounds
+        t0 = time.time()
+        ah = a.fit(arounds, eval_every=eval_every)
+        us = (time.time() - t0) / arounds * 1e6
+        h = ah[-1]
+        if s_bound == 0:
+            # S=0 is bitwise-sync, so its accumulated barrier time IS the
+            # synchronous run's simulated clock on this straggler fleet
+            sync_sim_time = h["sync_sim_time"]
+            out["sync"]["sim_time"] = sync_sim_time
+            _emit("async/sync_baseline", sync_us,
+                  f"sim_time={sync_sim_time:.1f};"
+                  f"top1={sh[-1]['accuracy']:.4f};target={target:.4f}")
+        hit = next((x for x in ah if x["accuracy"] >= target), None)
+        tta = hit["sim_time"] if hit else None
+        row = {"rounds": arounds, "accuracy": h["accuracy"],
+               "round_speedup": h["sim_speedup"],
+               "time_to_target": tta,
+               "tta_speedup": sync_sim_time / tta if tta else None,
+               "rounds_to_target": hit["round"] if hit else None,
+               "sim_time": h["sim_time"],
+               "staleness_mean": h["staleness_mean"],
+               "staleness_max": h["staleness_max"],
+               "commits": h["commits"], "traffic_mb": h["traffic_mb"],
+               "traces": eng.num_round_traces}
+        out[f"S{s_bound}"] = row
+        tta_s = f"{row['tta_speedup']:.2f}x" if tta else "not-reached"
+        _emit(f"async/S{s_bound}", us,
+              f"round_speedup={row['round_speedup']:.2f}x;"
+              f"tta_speedup={tta_s};top1={h['accuracy']:.4f};"
+              f"stale_max={row['staleness_max']};traces={row['traces']} "
+              f"(target: tta>=1.50x under 4x straggler)")
+    s1 = out["S1"]
+    out["meets_target"] = bool(s1["tta_speedup"] is not None
+                               and s1["tta_speedup"] >= 1.5)
+    _save("async", out)
+
+
+# ----------------------------------------------------------------------
 # Kernel microbenchmarks (wall time per call, interpret mode on CPU)
 # ----------------------------------------------------------------------
 
@@ -441,6 +531,7 @@ ALL = {
     "epochs": bench_epochs,
     "communication": bench_communication,
     "engine": bench_engine,
+    "async": bench_async,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }

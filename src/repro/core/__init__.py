@@ -1,13 +1,16 @@
 """Astraea core: the paper's contribution as composable JAX modules."""
 from repro.core import distribution, augmentation, scheduling, fl, comm
-from repro.core import client_store
+from repro.core import client_store, staleness
 from repro.core.astraea import AstraeaTrainer
+from repro.core.async_engine import AsyncRoundEngine, AsyncSpec
 from repro.core.client_store import ClientStore, build_client_store
 from repro.core.engine import EngineConfig, FLRoundEngine
 from repro.core.fedavg import FedAvgTrainer
 from repro.core.fl import LocalSpec
+from repro.core.staleness import StragglerModel, StragglerSpec
 
 __all__ = ["distribution", "augmentation", "scheduling", "fl", "comm",
-           "client_store", "AstraeaTrainer", "ClientStore",
-           "build_client_store", "EngineConfig", "FLRoundEngine",
-           "FedAvgTrainer", "LocalSpec"]
+           "client_store", "staleness", "AstraeaTrainer", "AsyncRoundEngine",
+           "AsyncSpec", "ClientStore", "build_client_store", "EngineConfig",
+           "FLRoundEngine", "FedAvgTrainer", "LocalSpec", "StragglerModel",
+           "StragglerSpec"]

@@ -48,6 +48,9 @@ class AstraeaTrainer:
     # padded mediator count; defaults to ceil(c / gamma) -- the exact output
     # size of Alg. 3 -- so reschedules never re-jit the round executable
     pad_mediators_to: int | None = None
+    # bounded-staleness async rounds (core/async_engine.py); None = the
+    # synchronous barrier engine
+    async_spec: object = None
     mesh: object = None                     # mediator mesh; None = all devices
     seed: int = 0
     history: list[dict] = field(default_factory=list)
@@ -83,7 +86,12 @@ class AstraeaTrainer:
                 store=self.store, pad_mediators_to=pad_m,
                 donate_params=False, seed=self.seed),
             mesh=self.mesh)
-        self.history = self.engine.history
+        if self.async_spec is not None:
+            from repro.core.async_engine import AsyncRoundEngine
+            self.runner = AsyncRoundEngine(self.engine, self.async_spec)
+        else:
+            self.runner = self.engine
+        self.history = self.runner.history
 
     # ---- historical trainer surface, delegated to the engine ----
     @property
@@ -111,7 +119,7 @@ class AstraeaTrainer:
         self.engine._round = value
 
     def run_round(self) -> None:
-        self.engine.run_round()
+        self.runner.run_round()
 
     def fit(self, rounds: int, eval_every: int = 10) -> list[dict]:
-        return self.engine.fit(rounds, eval_every)
+        return self.runner.fit(rounds, eval_every)

@@ -1,0 +1,301 @@
+"""Bounded-staleness async round subsystem: waves, commits, stragglers.
+
+``FLRoundEngine.run_round`` is a synchronous barrier -- the slowest
+mediator gates every synchronization round, which is exactly the
+heterogeneous-edge pathology the paper discusses (§VII). This module wraps
+the engine so mediator groups complete in **waves** and the server overlaps
+aggregation with the stragglers' training under a bounded staleness ``S``.
+
+Simulation model (everything deterministic, no wall-clock in the math):
+
+* A ``StragglerModel`` (``core/staleness.py``) assigns each mediator slot a
+  seeded slowdown factor; a mediator's simulated duration is
+  ``factor * active_client_slots * E_m``.
+* ``scheduling.partition_waves`` sorts mediators by duration and chunks
+  them into waves of ``wave_size`` -- slow mediators are co-scheduled into
+  the late waves so the fast waves are never blocked.
+* All waves of round ``r`` are dispatched at the round's virtual start
+  ``T_r`` from the same params snapshot, and complete at
+  ``T_r + max(duration in wave)``.
+* The server performs **one commit per round** at virtual time
+  ``C_r = max(completion of every wave that is >= S rounds old,
+  completion of round r's fastest wave)`` and folds every wave that has
+  landed by then. ``T_{r+1} = C_r``: the next round dispatches from the
+  committed weights while older stragglers may still be in flight. A wave
+  dispatched in round ``q`` therefore folds with staleness
+  ``s = r - q <= S`` -- the bound is enforced by construction, because a
+  commit always waits for waves that would otherwise exceed it.
+
+Staleness-discounted aggregation (the Eq. 6 generalization; discount
+policies in ``core/staleness.py``)::
+
+    w~_m        = lambda(s_m) * n_m,      s_m = r - q_m
+    params_{r+1} = params_r + sum_m (w~_m / sum_m' w~_m') * delta_m^(q_m)
+
+where ``delta_m^(q)`` is mediator ``m``'s weight delta computed from the
+round-``q`` dispatch snapshot, ``n_m`` its sample count, and ``lambda`` is
+``constant`` (1), ``polynomial`` ((1+s)^-alpha) or ``exponential``
+(e^(-alpha s)). The FedAvg (``aggregate="weights"``) path replaces
+``params_r + sum ... delta`` with the discounted weighted average of the
+returned weights. Every policy returns exactly 1.0 at ``s = 0``.
+
+``S = 0`` **reproduces the synchronous engine bitwise**: the commit must
+wait for every wave of its own round, so all contributions fold together
+with ``lambda = 1``; the fold reassembles the full padded-M stack in
+schedule order (real mediators first, dummy rows last -- identical bits,
+because each wave runs the engine's one traced program with non-members
+slot-masked into exact no-ops) and applies the same Eq. 6 reduction. This
+is asserted, on 1 and 4 forced host devices, in
+``tests/test_async_engine.py``.
+
+Execution note: each wave executes the full padded-M program with
+non-member rows masked, trading simulator FLOPs for trace stability
+(``num_round_traces == 1`` across waves and reschedules) and bit-fidelity.
+Real overlapped dispatch on a multi-controller TPU would instead launch
+per-wave collectives -- that follow-up is tracked in ROADMAP.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduling
+from repro.core.engine import FLRoundEngine
+from repro.core.fl import evaluate
+from repro.core.staleness import (StragglerModel, StragglerSpec,
+                                  make_staleness_policy)
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AsyncSpec:
+    """Async round configuration surfaced through both trainers.
+
+    ``staleness_bound`` is ``S``; ``wave_size`` is mediators per wave
+    (``0`` = single wave, i.e. the synchronous barrier); ``straggler``
+    drives the simulated fleet; ``policy``/``policy_alpha`` pick the
+    staleness discount ``lambda``.
+    """
+    staleness_bound: int = 0
+    wave_size: int = 0
+    straggler: StragglerSpec = field(default_factory=StragglerSpec)
+    policy: str = "polynomial"
+    policy_alpha: float = 0.5
+
+    def __post_init__(self):
+        if self.staleness_bound < 0:
+            raise ValueError("staleness_bound must be >= 0")
+        make_staleness_policy(self.policy, self.policy_alpha)  # validates
+
+
+@dataclass
+class _PendingWave:
+    """One executed-but-uncommitted wave's contribution."""
+    round: int
+    wave: int
+    t_done: float
+    rows: np.ndarray            # schedule indices, sorted ascending
+    values: PyTree              # (n_rows, ...) stacked deltas / weights
+    weights: jax.Array          # (n_rows,) Eq. 6 sample counts
+
+
+class AsyncRoundEngine:
+    """Bounded-staleness wave executor wrapping an ``FLRoundEngine``.
+
+    The wrapped engine keeps owning params, store, schedule and comm
+    meter; this class owns the virtual clock, the wave buffer, and the
+    staleness-discounted commits (see module docstring).
+    """
+
+    def __init__(self, engine: FLRoundEngine, spec: AsyncSpec):
+        self.engine, self.spec = engine, spec
+        self.policy = make_staleness_policy(spec.policy, spec.policy_alpha)
+        self._parallel_clients = engine.cfg.aggregate == "weights"
+
+        # the commit MUST be jitted: compiled as one program it is
+        # bitwise-identical to the aggregation tail inside the engine's
+        # round executable, while eager op-by-op dispatch rounds
+        # differently on some inputs (jit caches one executable per
+        # distinct commit size -- S=0 always commits the full padded M)
+        def _commit(params, stacked, weights):
+            agg = self.engine._aggregate(stacked, weights)
+            if self._parallel_clients:
+                return agg
+            return jax.tree.map(lambda p, d: p + d, params, agg)
+
+        self._commit_fn = jax.jit(_commit)
+        self._straggler: StragglerModel | None = None
+        self._pending: list[_PendingWave] = []
+        self._dummy: tuple | None = None    # current round's dummy-row tail
+        self.virtual_time = 0.0             # async clock (commit times)
+        self.sync_time = 0.0                # barrier baseline on same fleet
+        self.num_commits = 0
+        self.commit_log: list[dict] = []
+        self.last_wave_stats: dict | None = None
+        self.history: list[dict] = []
+        self._round = 0
+
+    # ---- trainer-facing surface, delegated to the wrapped engine ----
+    @property
+    def params(self):
+        return self.engine.params
+
+    @params.setter
+    def params(self, value):
+        self.engine.params = value
+
+    @property
+    def comm(self):
+        return self.engine.comm
+
+    @property
+    def sim_speedup(self) -> float:
+        """Simulated round-time reduction vs the synchronous barrier."""
+        return self.sync_time / max(self.virtual_time, 1e-12)
+
+    # ------------------------------------------------------------------
+    # one virtual synchronization round: dispatch waves, commit
+    # ------------------------------------------------------------------
+    def run_round(self) -> None:
+        spec, eng = self.spec, self.engine
+        data_args, plan_args, unperm, slot, row_to_group, m_real = \
+            eng.ensure_schedule()
+        slot_np = np.asarray(slot)
+        m_pad = slot_np.shape[0]
+        rtg = np.asarray(row_to_group)
+        row_of = np.zeros(m_real, np.int64)
+        for rr, g in enumerate(rtg):
+            if g >= 0:
+                row_of[g] = rr
+        if self._straggler is None:
+            # sized to the REAL mediator count (stable: Alg. 3 and the
+            # random schedule both emit ceil(c/gamma) groups), so the
+            # configured straggler fraction is never diluted by dummy
+            # padding slots; durations() raises if a schedule ever grows
+            self._straggler = StragglerModel(spec.straggler, m_real)
+        em = max(1, eng.cfg.mediator_epochs)
+        work = slot_np[row_of].sum(axis=1) * em             # (m_real,)
+        durations = self._straggler.durations(work)
+        waves, wstats = scheduling.partition_waves(durations, spec.wave_size)
+        self.last_wave_stats = wstats
+
+        r = self._round
+        t0 = self.virtual_time
+        keys = eng._round_keys(rtg, m_real, round_idx=r)
+        snapshot = eng.params                # dispatch snapshot for round r
+        for wi, wave in enumerate(waves):
+            rows = np.sort(np.asarray(wave, np.int64))
+            mask = np.zeros((m_pad, 1), np.float32)
+            mask[row_of[rows]] = 1.0
+            wslot = slot * jnp.asarray(mask)    # members bitwise, rest 0
+            stacked, weights = eng.wave_fn(snapshot, data_args, plan_args,
+                                           unperm, wslot, keys)
+            rj = jnp.asarray(rows)
+            vals = jax.tree.map(lambda a: a[rj], stacked)
+            wts = weights[rj]
+            if wi == 0:
+                # dummy-row tail (weight exactly 0) completing the padded
+                # stack so an S=0 commit aggregates the byte-identical
+                # input of the synchronous round executable
+                dj = jnp.arange(m_real, m_pad)
+                self._dummy = (jax.tree.map(lambda a: a[dj], stacked),
+                               weights[dj])
+            clients = int(slot_np[row_of[rows]].sum())
+            if self._parallel_clients:
+                eng.comm.fedavg_wave(clients)
+            else:
+                eng.comm.astraea_wave(clients, len(rows),
+                                      eng.cfg.mediator_epochs)
+            self._pending.append(_PendingWave(
+                r, wi, t0 + wstats["wave_times"][wi], rows, vals, wts))
+        eng.comm.end_round()
+
+        # ---- commit C_r: wait for staleness-expired waves + the round's
+        # fastest wave, fold everything that has landed by then ----
+        s_bound = spec.staleness_bound
+        due = [p.t_done for p in self._pending if p.round <= r - s_bound]
+        c_time = max(due + [t0 + wstats["wave_times"][0]])
+        ready = [p for p in self._pending if p.t_done <= c_time]
+        self._pending = [p for p in self._pending if p.t_done > c_time]
+        self._fold(ready, r, c_time)
+        self.virtual_time = c_time
+        self.sync_time += wstats["barrier_time"]
+        self._round += 1
+        eng._round = self._round
+
+    def _fold(self, ready: list[_PendingWave], r: int, c_time: float) -> None:
+        """One server commit: staleness-discounted Eq. 6 over ``ready``."""
+        assert ready, "a commit always folds at least the round's fast wave"
+        parts_v, parts_w, stales = [], [], []
+        for q in sorted({p.round for p in ready}):
+            ws = [p for p in ready if p.round == q]
+            rows = np.concatenate([p.rows for p in ws])
+            order = jnp.asarray(np.argsort(rows, kind="stable"))
+            vals = jax.tree.map(lambda *xs: jnp.concatenate(xs)[order],
+                                *[p.values for p in ws])
+            wts = jnp.concatenate([p.weights for p in ws])[order]
+            s = r - q
+            if s > 0:       # s == 0 keeps the weights bitwise untouched
+                wts = wts * jnp.float32(self.policy(s))
+            parts_v.append(vals)
+            parts_w.append(wts)
+            stales.extend([s] * rows.size)
+        dvals, dwts = self._dummy
+        stack = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                             *(parts_v + [dvals]))
+        wvec = jnp.concatenate(parts_w + [dwts])
+        self.engine.params = self._commit_fn(self.engine.params, stack, wvec)
+        self.num_commits += 1
+        self.commit_log.append({
+            "round": r, "time": float(c_time),
+            "folded_rows": int(sum(p.rows.size for p in ready)),
+            "staleness": stales,
+            "pending_after": len(self._pending),
+        })
+
+    def flush(self) -> None:
+        """Fold every still-pending straggler wave (end of training).
+
+        Pending waves are at most ``S`` rounds behind by construction, so
+        the final fold discounts them by ``s = r_final - q <= S``.
+        """
+        if not self._pending:
+            return
+        c_time = max(p.t_done for p in self._pending)
+        ready, self._pending = self._pending, []
+        self._fold(ready, self._round, c_time)
+        self.virtual_time = max(self.virtual_time, c_time)
+
+    # ------------------------------------------------------------------
+    # driving
+    # ------------------------------------------------------------------
+    def fit(self, rounds: int, eval_every: int = 10) -> list[dict]:
+        eng = self.engine
+        for i in range(rounds):
+            last = i == rounds - 1      # robust to repeated fit() calls
+            self.run_round()
+            if last:
+                self.flush()
+            if self._round % eval_every == 0 or last:
+                m = evaluate(eng.model, eng.params,
+                             eng.data.test_images, eng.data.test_labels)
+                stales = [s for c in self.commit_log for s in c["staleness"]]
+                m.update(round=self._round, traffic_mb=eng.comm.megabytes,
+                         sim_time=self.virtual_time,
+                         sync_sim_time=self.sync_time,
+                         sim_speedup=self.sim_speedup,
+                         commits=self.num_commits,
+                         staleness_mean=float(np.mean(stales)) if stales
+                         else 0.0,
+                         staleness_max=int(max(stales)) if stales else 0)
+                if eng.last_schedule_stats and \
+                        "kld_mean" in eng.last_schedule_stats:
+                    m["mediator_kld_mean"] = \
+                        eng.last_schedule_stats["kld_mean"]
+                self.history.append(m)
+        return self.history

@@ -11,10 +11,24 @@ E_m at fixed formula; we account the client leg per mediator epoch, which
 reproduces the Med1..Med4 ordering).
 
 ``|w|`` is parameter count x 4 bytes (fp32, as in the paper's TF models).
+
+Two accounting granularities share one ledger:
+
+* per **round** (``fedavg_round`` / ``astraea_round``) -- the synchronous
+  engine's unit;
+* per **wave** (``fedavg_wave`` / ``astraea_wave``) -- the async engine
+  charges each wave for its own clients' legs and its own mediators'
+  server exchange. Because a round's waves partition both its clients and
+  its mediators, the per-wave charges for one round sum to exactly the
+  per-round formula (asserted in tests/test_comm.py).
+
+``end_round`` snapshots the cumulative total into ``round_log`` so every
+synchronization round leaves an auditable WAN-bytes trail (the paper's 82%
+Table III claim is a ratio of these ledgers).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 import math
 
 
@@ -23,6 +37,9 @@ class CommMeter:
     num_params: int
     bytes_per_param: int = 4
     total_bytes: float = 0.0
+    # cumulative total_bytes after each synchronization round (one entry
+    # per round, appended by the engine via end_round)
+    round_log: list = field(default_factory=list)
 
     @property
     def model_bytes(self) -> float:
@@ -32,6 +49,7 @@ class CommMeter:
     def megabytes(self) -> float:
         return self.total_bytes / 2 ** 20
 
+    # ---- per-round accounting (synchronous engine) ----
     def fedavg_round(self, c: int) -> None:
         self.total_bytes += 2 * c * self.model_bytes
 
@@ -40,3 +58,21 @@ class CommMeter:
         client_leg = 2 * c * self.model_bytes * mediator_epochs
         server_leg = 2 * num_mediators * self.model_bytes
         self.total_bytes += client_leg + server_leg
+
+    # ---- per-wave accounting (async engine) ----
+    def fedavg_wave(self, clients: int) -> None:
+        """One async FedAvg wave: model down+up for this wave's clients."""
+        self.total_bytes += 2 * clients * self.model_bytes
+
+    def astraea_wave(self, clients: int, mediators: int,
+                     mediator_epochs: int = 1) -> None:
+        """One async Astraea wave: client legs for this wave's clients plus
+        the server<->mediator exchange for this wave's mediators."""
+        client_leg = 2 * clients * self.model_bytes * mediator_epochs
+        server_leg = 2 * mediators * self.model_bytes
+        self.total_bytes += client_leg + server_leg
+
+    # ---- per-round ledger ----
+    def end_round(self) -> None:
+        """Snapshot the cumulative WAN bytes at a round boundary."""
+        self.round_log.append(self.total_bytes)

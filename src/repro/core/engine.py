@@ -49,6 +49,12 @@ What makes it an engine rather than a trainer loop:
 5. **Kernel aggregation.** ``use_kernel_agg`` routes Eq. 6 through the
    ``fedavg_agg`` Pallas kernel (interpret-mode on CPU, Mosaic on TPU);
    default is the pure-jnp ``weighted_average`` (same math, XLA-fused).
+6. **Wave entry point.** ``wave_fn`` is the same full padded-M program
+   stopped just before aggregation, for the bounded-staleness async
+   subsystem (``core/async_engine.py``): a wave zeroes the slot rows of
+   mediators outside it (exact no-ops, like dummy mediators), so the one
+   trace serves every wave of every reschedule and ``num_round_traces``
+   stays 1 for an async engine too.
 
 Bit-identity guarantees: every store feeds identical per-slot values into
 identical per-row programs (gathers move exact bits), the sharded store's
@@ -229,8 +235,7 @@ class FLRoundEngine:
                                     P_med, P_med),
                           out_specs=(P_med, P_med), manual_axes=("mediator",))
 
-        def round_fn(params, data, plan, unperm, slot, keys):
-            self.num_round_traces += 1          # python: counts (re)traces
+        def trained_rows(params, data, plan, unperm, slot, keys):
             stacked, weights = train(params, data, plan, slot, keys)
             if store.permutes_rows:             # undo locality placement
                 stacked = jax.tree.map(lambda a: a[unperm], stacked)
@@ -239,11 +244,28 @@ class FLRoundEngine:
             # order (and hence the result, bitwise) is mesh-independent
             stacked = jax.lax.with_sharding_constraint(stacked, replicated)
             weights = jax.lax.with_sharding_constraint(weights, replicated)
+            return stacked, weights
+
+        def round_fn(params, data, plan, unperm, slot, keys):
+            self.num_round_traces += 1          # python: counts (re)traces
+            stacked, weights = trained_rows(params, data, plan, unperm, slot,
+                                            keys)
             agg = self._aggregate(stacked, weights)
             if parallel_clients:
                 return agg
             return jax.tree.map(lambda p, d: p + d, params, agg)
 
+        def wave_fn(params, data, plan, unperm, slot, keys):
+            # the wave-partitioned entry point (core/async_engine.py): the
+            # SAME full padded-M program, stopping before aggregation. The
+            # caller zeroes the slot rows of mediators outside the wave
+            # (exact no-ops, like dummy mediators), so one trace serves
+            # every wave of every reschedule. No donation: the dispatch
+            # snapshot params are shared by all waves of a round.
+            self.num_round_traces += 1          # python: counts (re)traces
+            return trained_rows(params, data, plan, unperm, slot, keys)
+
+        self.wave_fn = jax.jit(wave_fn)
         donate = (0,) if cfg.donate_params else ()
         return jax.jit(round_fn, donate_argnums=donate)
 
@@ -313,9 +335,11 @@ class FLRoundEngine:
         return (data_args, plan_args, jnp.asarray(unperm),
                 jnp.asarray(slot), row_to_group, m_real)
 
-    def _round_keys(self, row_to_group: np.ndarray, m_real: int) -> jax.Array:
-        base = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed + 1),
-                                  self._round)
+    def _round_keys(self, row_to_group: np.ndarray, m_real: int,
+                    round_idx: int | None = None) -> jax.Array:
+        base = jax.random.fold_in(
+            jax.random.PRNGKey(self.cfg.seed + 1),
+            self._round if round_idx is None else round_idx)
         keys = jax.random.split(base, m_real)   # split at the REAL count
         take = np.where(row_to_group >= 0, row_to_group, 0)
         rows = jnp.asarray(keys)[jnp.asarray(take)]
@@ -325,13 +349,20 @@ class FLRoundEngine:
     # ------------------------------------------------------------------
     # driving
     # ------------------------------------------------------------------
-    def run_round(self) -> None:
+    def ensure_schedule(self) -> tuple:
+        """(Re)pack the gather schedule if this round needs one."""
         cfg = self.cfg
         c = min(cfg.clients_per_round, self.data.num_clients)
         if cfg.reschedule_every_round or self._schedule is None:
             sel = self._rng.choice(self.data.num_clients, size=c, replace=False)
             self._schedule = self._pack_schedule(sel)
-        data_args, plan_args, unperm, slot, row_to_group, m_real = self._schedule
+        return self._schedule
+
+    def run_round(self) -> None:
+        cfg = self.cfg
+        c = min(cfg.clients_per_round, self.data.num_clients)
+        data_args, plan_args, unperm, slot, row_to_group, m_real = \
+            self.ensure_schedule()
         keys = self._round_keys(row_to_group, m_real)
         self.params = self._round_fn(self.params, data_args, plan_args,
                                      unperm, slot, keys)
@@ -339,6 +370,7 @@ class FLRoundEngine:
             self.comm.fedavg_round(c)
         else:
             self.comm.astraea_round(c, cfg.gamma, cfg.mediator_epochs)
+        self.comm.end_round()
         self._round += 1
 
     def fit(self, rounds: int, eval_every: int = 10) -> list[dict]:

@@ -30,6 +30,9 @@ class FedAvgTrainer:
     # padded mediator count; defaults to c (gamma=1) so the per-round
     # random reschedule never re-jits the round executable
     pad_mediators_to: int | None = None
+    # bounded-staleness async rounds (core/async_engine.py); None = the
+    # synchronous barrier engine
+    async_spec: object = None
     mesh: object = None              # mediator mesh; None = all devices
     seed: int = 0
     loss_fn: object = None           # optional custom local loss
@@ -47,7 +50,12 @@ class FedAvgTrainer:
                                 pad_mediators_to=pad_m, donate_params=False,
                                 seed=self.seed),
             mesh=self.mesh, loss_fn=self.loss_fn)
-        self.history = self.engine.history
+        if self.async_spec is not None:
+            from repro.core.async_engine import AsyncRoundEngine
+            self.runner = AsyncRoundEngine(self.engine, self.async_spec)
+        else:
+            self.runner = self.engine
+        self.history = self.runner.history
 
     # ---- historical trainer surface, delegated to the engine ----
     @property
@@ -71,7 +79,7 @@ class FedAvgTrainer:
         self.engine._round = value
 
     def run_round(self) -> None:
-        self.engine.run_round()
+        self.runner.run_round()
 
     def fit(self, rounds: int, eval_every: int = 10) -> list[dict]:
-        return self.engine.fit(rounds, eval_every)
+        return self.runner.fit(rounds, eval_every)

@@ -1,0 +1,120 @@
+"""Staleness-weighting policies and the simulated straggler model.
+
+Both halves of the async round subsystem's "physics" live here, kept
+deliberately free of any wall-clock dependence so trajectories are
+reproducible bit-for-bit:
+
+* **Staleness policies** map a wave's staleness ``s`` (how many server
+  commits behind the wave's dispatch snapshot is when its contribution
+  folds) to a discount factor ``lambda(s)`` applied to the wave's Eq. 6
+  aggregation weights. Every policy returns **exactly 1.0 at s=0** --
+  multiplying a float by the literal ``1.0`` is a bitwise no-op, which is
+  what lets the ``S=0`` async trajectory reproduce the synchronous engine
+  exactly (see ``core/async_engine.py``).
+
+* **StragglerModel** assigns each mediator *slot* a deterministic slowdown
+  factor drawn once from a config-seeded RNG (never from time.time() or
+  real execution speed). A mediator's simulated training duration is
+  ``factor * work`` where ``work`` counts its active client slots times
+  mediator epochs -- the quantity a real heterogeneous MEC deployment's
+  round time is proportional to. Factors are keyed by mediator index in
+  the round schedule (slot ``i`` is the same logical mediator fleet slot
+  every round -- Alg. 3 and the random schedule both emit a stable
+  ``ceil(c / gamma)`` groups), not by client identity or device row:
+  mediators sit on edge servers in the paper's architecture, so
+  heterogeneity persists across reschedules and is independent of the
+  engine's locality placement.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+POLICIES = ("constant", "polynomial", "exponential")
+STRAGGLER_MODELS = ("none", "fixed", "lognormal")
+
+
+def make_staleness_policy(name: str, alpha: float = 0.5
+                          ) -> Callable[[int], float]:
+    """Build ``lambda(s)``, the staleness discount.
+
+    * ``constant``: 1 for all s (FedBuff-style undiscounted buffering).
+    * ``polynomial``: (1 + s)^-alpha (FedAsync's polynomial family).
+    * ``exponential``: exp(-alpha * s).
+
+    All policies return exactly ``1.0`` at ``s == 0``.
+    """
+    if name not in POLICIES:
+        raise ValueError(f"unknown staleness policy {name!r}; "
+                         f"expected one of {POLICIES}")
+    if alpha < 0:
+        raise ValueError("policy alpha must be >= 0")
+    if name == "constant":
+        return lambda s: 1.0
+    if name == "polynomial":
+        return lambda s: 1.0 if s <= 0 else float((1.0 + s) ** -alpha)
+    return lambda s: 1.0 if s <= 0 else float(math.exp(-alpha * s))
+
+
+@dataclass(frozen=True)
+class StragglerSpec:
+    """Config for the simulated heterogeneous mediator fleet.
+
+    * ``none``: every slot runs at unit speed (all waves tie).
+    * ``fixed``: a ``straggler_frac`` fraction of slots (chosen by the
+      seeded RNG) run ``slowdown``x slower -- the paper-style "one slow
+      edge server" scenario the benchmarks use (4x straggler).
+    * ``lognormal``: factors ~ exp(N(0, sigma)), a continuous spread.
+    """
+    model: str = "none"
+    straggler_frac: float = 0.25
+    slowdown: float = 4.0
+    sigma: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.model not in STRAGGLER_MODELS:
+            raise ValueError(f"unknown straggler model {self.model!r}; "
+                             f"expected one of {STRAGGLER_MODELS}")
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            raise ValueError("straggler_frac must be in [0, 1]")
+        if self.slowdown < 1.0:
+            raise ValueError("slowdown must be >= 1 (it is a slowdown)")
+
+
+class StragglerModel:
+    """Deterministic per-slot slowdown factors for ``num_slots`` mediators.
+
+    Factors are drawn once at construction from ``spec.seed``; the same
+    spec and slot count always produce the same fleet. No wall-clock
+    enters the math anywhere.
+    """
+
+    def __init__(self, spec: StragglerSpec, num_slots: int):
+        self.spec = spec
+        rng = np.random.default_rng(spec.seed)
+        factors = np.ones(num_slots, np.float64)
+        if spec.model == "fixed":
+            k = int(round(spec.straggler_frac * num_slots))
+            if k > 0:
+                slow = rng.choice(num_slots, size=k, replace=False)
+                factors[slow] = spec.slowdown
+        elif spec.model == "lognormal":
+            factors = np.exp(rng.normal(0.0, spec.sigma, num_slots))
+        self.factors = factors
+
+    def durations(self, work: np.ndarray) -> np.ndarray:
+        """Simulated training time per mediator: ``factor * work``.
+
+        ``work`` is per-mediator (schedule order); its length must not
+        exceed the modeled slot count.
+        """
+        work = np.asarray(work, np.float64)
+        if work.shape[0] > self.factors.shape[0]:
+            raise ValueError(
+                f"schedule has {work.shape[0]} mediators but the straggler "
+                f"model covers {self.factors.shape[0]} slots")
+        return self.factors[:work.shape[0]] * work

@@ -1,0 +1,296 @@
+"""Bounded-staleness async round subsystem (core/async_engine.py).
+
+The acceptance claims: the S=0 async trajectory is BITWISE-identical to the
+synchronous engine (on 1 and 4 forced host devices, across stores, waves
+and reschedules), ``num_round_traces`` stays 1 no matter how many waves
+execute, the staleness bound is enforced by construction, and a 4x
+straggler yields a >= 1.5x simulated round-time reduction at S=1."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LocalSpec, scheduling
+from repro.core.async_engine import AsyncRoundEngine, AsyncSpec
+from repro.core.engine import EngineConfig, FLRoundEngine
+from repro.core.staleness import (StragglerModel, StragglerSpec,
+                                  make_staleness_policy)
+from repro.launch.mesh import make_mediator_mesh
+from repro.models.cnn import emnist_cnn
+from repro.optim import adam
+
+
+@pytest.fixture(scope="module")
+def model(tiny_federation):
+    return emnist_cnn(tiny_federation.num_classes, image_size=16)
+
+
+FOUR_X = StragglerSpec(model="fixed", straggler_frac=0.34, slowdown=4.0,
+                       seed=0)
+
+
+def _params_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _sync_async_pair(model, fed, cfg, spec, rounds, mesh_size=1):
+    sync = FLRoundEngine(model, adam(1e-3), fed, cfg,
+                         mesh=make_mediator_mesh(mesh_size))
+    for _ in range(rounds):
+        sync.run_round()
+    eng = FLRoundEngine(model, adam(1e-3), fed, cfg,
+                        mesh=make_mediator_mesh(mesh_size))
+    a = AsyncRoundEngine(eng, spec)
+    for _ in range(rounds):
+        a.run_round()
+    return sync, a
+
+
+def test_s0_single_wave_bitwise_matches_sync(model, tiny_federation):
+    """S=0 with one wave is the synchronous barrier, bit for bit."""
+    cfg = EngineConfig.astraea(clients_per_round=6, gamma=3,
+                               local=LocalSpec(10, 1), seed=0,
+                               pad_mediators_to=2, donate_params=False)
+    sync, a = _sync_async_pair(model, tiny_federation, cfg,
+                               AsyncSpec(staleness_bound=0, wave_size=0),
+                               rounds=2)
+    _params_bitwise(sync.params, a.params)
+    assert a.engine.num_round_traces == 1
+
+
+def test_s0_multi_wave_bitwise_across_reschedules(model, tiny_federation):
+    """The real claim: waves execute separately (straggler-ordered,
+    1 mediator each), yet S=0 commits reproduce the synchronous engine
+    bitwise -- across per-round KLD reschedules, on one trace."""
+    cfg = EngineConfig.astraea(clients_per_round=6, gamma=3,
+                               local=LocalSpec(10, 1), seed=0,
+                               pad_mediators_to=3, donate_params=False,
+                               reschedule_every_round=True)
+    spec = AsyncSpec(staleness_bound=0, wave_size=1,
+                     straggler=StragglerSpec(model="lognormal", seed=3))
+    sync, a = _sync_async_pair(model, tiny_federation, cfg, spec, rounds=3)
+    _params_bitwise(sync.params, a.params)
+    assert a.engine.num_round_traces == 1
+    assert a.engine.num_schedule_packs == 3
+    assert a.num_commits == 3 and not a._pending      # S=0 never defers
+
+
+def test_s0_fedavg_weights_path_bitwise(model, tiny_federation):
+    """The gamma=1 full-weight aggregation path through async waves."""
+    cfg = EngineConfig.fedavg(clients_per_round=4, local=LocalSpec(10, 1),
+                              seed=0, pad_mediators_to=4,
+                              donate_params=False)
+    spec = AsyncSpec(staleness_bound=0, wave_size=2,
+                     straggler=StragglerSpec(model="lognormal", seed=5))
+    sync, a = _sync_async_pair(model, tiny_federation, cfg, spec, rounds=3)
+    _params_bitwise(sync.params, a.params)
+    assert a.engine.num_round_traces == 1
+
+
+def test_bounded_staleness_defers_discounts_and_speeds_up(model,
+                                                          tiny_federation):
+    """S=1 under a 4x straggler: the straggler wave lands one round late
+    (never later), every contribution eventually folds, and the simulated
+    round time beats the synchronous barrier by >= 1.5x."""
+    cfg = EngineConfig.astraea(clients_per_round=6, gamma=2,
+                               local=LocalSpec(10, 1), seed=0,
+                               pad_mediators_to=3, donate_params=False)
+    rounds = 6
+    eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                        mesh=make_mediator_mesh(1))
+    a = AsyncRoundEngine(eng, AsyncSpec(staleness_bound=1, wave_size=1,
+                                        straggler=FOUR_X))
+    for _ in range(rounds):
+        a.run_round()
+    assert a._pending                   # the straggler is in flight...
+    a.flush()
+    assert not a._pending               # ...and the final fold lands it
+    stales = [s for c in a.commit_log for s in c["staleness"]]
+    assert max(stales) == 1             # bound enforced, overlap happened
+    assert sum(c["folded_rows"] for c in a.commit_log) == rounds * 3
+    assert a.sim_speedup >= 1.5         # 4x straggler off the critical path
+    assert a.virtual_time < a.sync_time
+    assert a.engine.num_round_traces == 1
+
+
+def test_fit_flushes_on_every_call(model, tiny_federation):
+    """Repeated fit() calls must each flush their pending stragglers --
+    the gate is the call's own last round, not the absolute counter."""
+    cfg = EngineConfig.astraea(clients_per_round=6, gamma=2,
+                               local=LocalSpec(10, 1), seed=0,
+                               pad_mediators_to=3, donate_params=False)
+    eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                        mesh=make_mediator_mesh(1))
+    a = AsyncRoundEngine(eng, AsyncSpec(staleness_bound=1, wave_size=1,
+                                        straggler=FOUR_X))
+    a.fit(2, eval_every=2)
+    assert not a._pending
+    a.fit(2, eval_every=2)
+    assert not a._pending
+    assert sum(c["folded_rows"] for c in a.commit_log) == 4 * 3
+
+
+def test_async_final_accuracy_tracks_sync(model, tiny_federation):
+    """Equal-final-accuracy tolerance: the staleness-discounted trajectory
+    stays close to the synchronous one on the same federation."""
+    cfg = EngineConfig.astraea(clients_per_round=6, gamma=2,
+                               local=LocalSpec(10, 1), seed=0,
+                               pad_mediators_to=3, donate_params=False)
+    rounds = 8
+    sync = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                         mesh=make_mediator_mesh(1))
+    sh = sync.fit(rounds, eval_every=rounds)
+    eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                        mesh=make_mediator_mesh(1))
+    a = AsyncRoundEngine(eng, AsyncSpec(staleness_bound=1, wave_size=1,
+                                        straggler=FOUR_X))
+    ah = a.fit(rounds, eval_every=rounds)
+    assert abs(ah[-1]["accuracy"] - sh[-1]["accuracy"]) <= 0.1
+    assert ah[-1]["sim_speedup"] >= 1.5
+    assert ah[-1]["staleness_max"] <= 1
+
+
+def test_async_spec_through_both_trainers(tiny_federation):
+    """async_spec plumbs through AstraeaTrainer and FedAvgTrainer; the
+    S=0 trainer trajectory equals the synchronous trainer bitwise."""
+    from repro.core.astraea import AstraeaTrainer
+    from repro.core.fedavg import FedAvgTrainer
+    model = emnist_cnn(tiny_federation.num_classes, image_size=16)
+    spec = AsyncSpec(staleness_bound=0, wave_size=1,
+                     straggler=StragglerSpec(model="lognormal", seed=3))
+    kw = dict(clients_per_round=6, gamma=3, local=LocalSpec(10, 1),
+              alpha=None, seed=0, mesh=make_mediator_mesh(1))
+    plain = AstraeaTrainer(model, adam(1e-3), tiny_federation, **kw)
+    plain.run_round()
+    tr = AstraeaTrainer(model, adam(1e-3), tiny_federation,
+                        async_spec=spec, **kw)
+    tr.run_round()
+    _params_bitwise(plain.params, tr.params)
+    assert isinstance(tr.runner, AsyncRoundEngine)
+
+    fa = FedAvgTrainer(model, adam(1e-3), tiny_federation,
+                       clients_per_round=4, local=LocalSpec(10, 1), seed=0,
+                       async_spec=AsyncSpec(staleness_bound=1, wave_size=2,
+                                            straggler=FOUR_X),
+                       mesh=make_mediator_mesh(1))
+    hist = fa.fit(3, eval_every=3)
+    assert hist[-1]["sim_speedup"] > 0 and "staleness_mean" in hist[-1]
+    assert fa.engine.num_round_traces == 1
+
+
+def test_staleness_policies_are_exact_at_zero():
+    for name in ("constant", "polynomial", "exponential"):
+        lam = make_staleness_policy(name, alpha=0.5)
+        assert lam(0) == 1.0            # exactly: the bitwise S=0 guarantee
+        vals = [lam(s) for s in range(5)]
+        assert all(a >= b for a, b in zip(vals, vals[1:]))  # non-increasing
+        assert all(v > 0 for v in vals)
+    assert make_staleness_policy("constant")(7) == 1.0
+    assert make_staleness_policy("polynomial", 1.0)(1) == pytest.approx(0.5)
+    with pytest.raises(ValueError, match="staleness policy"):
+        make_staleness_policy("linear")
+
+
+def test_straggler_model_deterministic_and_seeded():
+    spec = StragglerSpec(model="fixed", straggler_frac=0.25, slowdown=4.0,
+                         seed=7)
+    a, b = StragglerModel(spec, 8), StragglerModel(spec, 8)
+    np.testing.assert_array_equal(a.factors, b.factors)
+    assert (a.factors == 4.0).sum() == 2 and (a.factors == 1.0).sum() == 6
+    c = StragglerModel(dataclasses.replace(spec, seed=8), 8)
+    assert not np.array_equal(a.factors, c.factors)
+    none = StragglerModel(StragglerSpec(), 5)
+    np.testing.assert_array_equal(none.factors, np.ones(5))
+    work = np.array([2.0, 3.0])
+    np.testing.assert_array_equal(none.durations(work), work)
+    with pytest.raises(ValueError, match="straggler model"):
+        StragglerSpec(model="uniform")
+    with pytest.raises(ValueError, match="slots"):
+        none.durations(np.ones(9))
+
+
+def test_partition_waves_coschedules_stragglers():
+    durations = np.array([1.0, 8.0, 1.5, 7.5, 1.2, 1.1])
+    waves, stats = scheduling.partition_waves(durations, 2)
+    assert sorted(i for w in waves for i in w) == list(range(6))
+    assert all(len(w) <= 2 for w in waves)
+    assert waves[-1] == [3, 1]          # both stragglers share the last wave
+    assert stats["wave_times"] == sorted(stats["wave_times"])
+    assert stats["barrier_time"] == 8.0
+    assert stats["blocked_time_saved"] > 0   # vs schedule-order chunking
+    one, s1 = scheduling.partition_waves(durations, 0)
+    assert len(one) == 1 and s1["wave_times"] == [8.0]
+    with pytest.raises(ValueError, match="zero mediators"):
+        scheduling.partition_waves(np.array([]), 2)
+
+
+def test_async_spec_validation():
+    with pytest.raises(ValueError, match="staleness_bound"):
+        AsyncSpec(staleness_bound=-1)
+    with pytest.raises(ValueError, match="staleness policy"):
+        AsyncSpec(policy="bogus")
+    with pytest.raises(ValueError, match="straggler_frac"):
+        StragglerSpec(model="fixed", straggler_frac=1.5)
+
+
+_MULTI_DEVICE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.core import LocalSpec
+    from repro.core.async_engine import AsyncRoundEngine, AsyncSpec
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    from repro.core.staleness import StragglerSpec
+    from repro.data.federated import partition, EMNIST_LIKE
+    from repro.launch.mesh import make_mediator_mesh
+    from repro.models.cnn import emnist_cnn
+    from repro.optim import adam
+
+    spec = dataclasses.replace(EMNIST_LIKE, num_classes=8, image_size=16)
+    fed = partition(spec, num_clients=12, total_samples=600, test_samples=160,
+                    sizes="instagram", global_dist="letterfreq",
+                    local="random", seed=0, name="tiny")
+    model = emnist_cnn(8, image_size=16)
+    aspec = AsyncSpec(staleness_bound=0, wave_size=1,
+                      straggler=StragglerSpec(model="lognormal", seed=3))
+    for store in ("replicated", "sharded"):
+        cfg = EngineConfig.astraea(clients_per_round=6, gamma=3,
+                                   local=LocalSpec(10, 1), seed=0,
+                                   pad_mediators_to=4, donate_params=False,
+                                   reschedule_every_round=True, store=store)
+        sync = FLRoundEngine(model, adam(1e-3), fed, cfg,
+                             mesh=make_mediator_mesh(4))
+        sync.run_round()
+        sync.run_round()
+        eng = FLRoundEngine(model, adam(1e-3), fed, cfg,
+                            mesh=make_mediator_mesh(4))
+        a = AsyncRoundEngine(eng, aspec)
+        a.run_round()
+        a.run_round()
+        for x, y in zip(jax.tree.leaves(sync.params),
+                        jax.tree.leaves(a.params)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert eng.num_round_traces == 1, eng.num_round_traces
+    print("OK")
+""")
+
+
+def test_async_multi_device_mesh(tmp_path):
+    """S=0 waves == sync on a real 4-device mediator mesh (replicated AND
+    client-sharded stores), one trace. Subprocess: the device count must
+    be forced before jax initializes."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _MULTI_DEVICE_SCRIPT],
+                          env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "OK" in proc.stdout

@@ -66,3 +66,52 @@ def test_kernel_scoring_matches_reference():
     m_ref = scheduling.reschedule(counts, gamma=5, use_kernel=False)
     m_ker = scheduling.reschedule(counts, gamma=5, use_kernel=True)
     assert [m.clients for m in m_ref] == [m.clients for m in m_ker]
+
+
+def test_place_mediators_stats_match_bruteforce_recount():
+    """The reported local/cross-shard fetch counts must equal a from-
+    scratch recount of the placement on a seeded federation schedule."""
+    rng = np.random.default_rng(11)
+    num_clients, num_shards, gamma = 32, 4, 3
+    k_local = num_clients // num_shards
+    owner = lambda cid: cid // k_local
+    counts = _random_counts(rng, k=num_clients, c=10)
+    sel = rng.choice(num_clients, size=24, replace=False)
+    meds = scheduling.reschedule(counts[sel], gamma)
+    groups = [[int(sel[i]) for i in m.clients] for m in meds]
+    rows_per_shard = (len(groups) + num_shards - 1) // num_shards
+    rows, stats = scheduling.place_mediators(groups, num_shards,
+                                             rows_per_shard, owner)
+    # brute-force recount: shard of a group = shard of its assigned row
+    local = remote = 0
+    seen = set()
+    for r, g in enumerate(rows):
+        if g < 0:
+            continue
+        assert g not in seen
+        seen.add(g)
+        shard = r // rows_per_shard
+        for cid in groups[g]:
+            if owner(cid) == shard:
+                local += 1
+            else:
+                remote += 1
+    assert seen == set(range(len(groups)))
+    assert stats["local_fetches"] == local
+    assert stats["remote_fetches"] == remote
+    assert stats["total_fetches"] == local + remote == \
+        sum(len(g) for g in groups)
+
+
+@given(st.integers(0, 100), st.integers(8, 24), st.integers(2, 5))
+@settings(max_examples=15, deadline=None)
+def test_greedy_reschedule_no_worse_than_random(seed, k, gamma):
+    """Property (Fig. 7 mechanism): on skewed label histograms the greedy
+    Alg. 3 schedule's mean mediator KLD never exceeds arbitrary random
+    grouping of the same clients."""
+    rng = np.random.default_rng(seed)
+    counts = _random_counts(rng, k=k, c=8, skew=True)
+    greedy = scheduling.schedule_stats(scheduling.reschedule(counts, gamma))
+    rand = scheduling.schedule_stats(
+        scheduling.random_schedule(k, gamma, counts, seed=seed))
+    assert greedy["kld_mean"] <= rand["kld_mean"] + 1e-9
