@@ -74,12 +74,13 @@ def run_fedavg(model, fed, scale: Scale, *, seed=0, local_epochs=None):
 
 
 def run_astraea(model, fed, scale: Scale, *, alpha=0.67, mediator_epochs=1,
-                gamma=None, c=None, seed=0, local_epochs=None, use_kernel=False):
+                gamma=None, c=None, seed=0, local_epochs=None, use_kernel=False,
+                aug_mode="online"):
     tr = AstraeaTrainer(model, adam(1e-3), fed,
                         clients_per_round=c or scale.c, gamma=gamma or scale.gamma,
                         local=LocalSpec(scale.batch, local_epochs or scale.local_epochs),
                         mediator_epochs=mediator_epochs, alpha=alpha, seed=seed,
-                        use_kernel_agg=use_kernel)
+                        use_kernel_agg=use_kernel, aug_mode=aug_mode)
     hist = tr.fit(scale.rounds, eval_every=scale.eval_every)
     return tr, hist
 

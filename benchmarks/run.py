@@ -112,6 +112,9 @@ def bench_accuracy(scale: E.Scale):
 # ----------------------------------------------------------------------
 
 def bench_alpha_sweep(scale: E.Scale):
+    # materialized mode: the sweep reproduces the paper's Fig. 9 *realized*
+    # storage cost; the online pipeline (which avoids it) is benchmarked in
+    # bench_augmentation
     spec = E.emnist_spec(scale)
     model = E.model_for(spec, scale)
     fed = E.make_fed(spec, scale, name="alpha")
@@ -119,7 +122,7 @@ def bench_alpha_sweep(scale: E.Scale):
     for alpha in (None, 0.33, 0.67, 1.0, 2.0):
         t0 = time.time()
         tr, hist = E.run_astraea(model, fed, scale, alpha=alpha, gamma=1,
-                                 mediator_epochs=1)
+                                 mediator_epochs=1, aug_mode="materialized")
         dt = (time.time() - t0) / scale.rounds * 1e6
         acc = E.best_acc(hist)
         tag = "none" if alpha is None else f"{alpha:.2f}"
@@ -371,6 +374,96 @@ def bench_engine(scale: E.Scale, stores: tuple = ("replicated",)):
 
 
 # ----------------------------------------------------------------------
+# Online rebalancing: warp-kernel vs map_coordinates resampler, online vs
+# materialized round throughput, and per-device client-store residency
+# ----------------------------------------------------------------------
+
+def bench_augmentation(scale: E.Scale):
+    """The Alg. 2 execution-mode matrix (ISSUE 4). Three axes:
+
+    * ``warp/*`` -- the augmentation primitive itself: the fused Pallas
+      bilinear-warp kernel (one launch per batch; interpret mode on CPU,
+      where it is expected to LOSE to XLA -- the win is the single-launch
+      Mosaic path on TPU) vs the vectorized map_coordinates reference.
+    * ``round/*`` -- wall time per synchronization round with augmentation
+      off / online (in-round resample+warp) / materialized (pre-inflated
+      federation): the online tax is paid in round compute, the
+      materialized tax in storage + packed-batch size.
+    * ``store_bytes/*`` -- per-device client-store residency: online must
+      equal raw under every placement policy; materialized inflates it by
+      ``extra_storage_frac`` (the paper's ~24%; larger at toy scale).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import LocalSpec, augmentation
+    from repro.core.astraea import AstraeaTrainer
+    from repro.kernels import ops, ref as kref
+    from repro.optim import adam
+
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    # ---- warp primitive: pallas kernel vs map_coordinates reference ----
+    b, hw = 64, scale.image
+    imgs = jax.random.normal(key, (b, hw, hw, 1), jnp.float32)
+    mats, trans = augmentation.warp_params(jax.random.fold_in(key, 1), b)
+
+    def timeit(fn, *args, n=5):
+        jax.block_until_ready(fn(*args))
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.time() - t0) / n * 1e6
+
+    ref_fn = jax.jit(lambda i, m, t: kref.affine_warp(i, m, t))
+    us_k = timeit(ops.affine_warp, imgs, mats, trans)
+    us_r = timeit(ref_fn, imgs, mats, trans)
+    out["warp"] = {"pallas_us": us_k, "map_coordinates_us": us_r,
+                   "batch": b, "image": hw}
+    _emit("augmentation/warp/pallas", us_k,
+          f"map_coordinates_us={us_r:.1f};n={b}x{hw}x{hw} "
+          f"(interpret mode on CPU; kernel targets TPU Mosaic)")
+
+    # ---- execution modes: round time + per-device store residency ----
+    spec = E.emnist_spec(scale)
+    model = E.model_for(spec, scale)
+    fed = E.make_fed(spec, scale, name="aug")
+    reps = 3
+    modes = {"none": dict(alpha=None),
+             "online": dict(alpha=0.67, aug_mode="online"),
+             "materialized": dict(alpha=0.67, aug_mode="materialized")}
+    for mode, kw in modes.items():
+        tr = AstraeaTrainer(model, adam(1e-3), fed,
+                            clients_per_round=scale.c, gamma=scale.gamma,
+                            local=LocalSpec(scale.batch, 1), seed=0, **kw)
+        tr.run_round()                       # compile + schedule pack
+        jax.block_until_ready(tr.params)
+        t0 = time.time()
+        for _ in range(reps):
+            tr.run_round()
+        jax.block_until_ready(tr.params)
+        us = (time.time() - t0) / reps * 1e6
+        row = {"us_per_round": us,
+               "store_bytes": tr.engine.store.per_device_bytes(),
+               "extra_storage_frac": tr.extra_storage_frac,
+               "planned_extra_frac": tr.planned_extra_frac,
+               "traces": tr.engine.num_round_traces}
+        out[mode] = row
+        _emit(f"augmentation/round/{mode}", us,
+              f"store_bytes={row['store_bytes']};"
+              f"extra_storage={row['extra_storage_frac']:.2f};"
+              f"traces={row['traces']}")
+    raw_b = out["none"]["store_bytes"]
+    _emit("augmentation/store_bytes", 0.0,
+          f"online_vs_raw={out['online']['store_bytes'] / raw_b:.2f}x;"
+          f"materialized_vs_raw={out['materialized']['store_bytes'] / raw_b:.2f}x"
+          " (online must be 1.00x)")
+    out["online_bytes_equal_raw"] = bool(
+        out["online"]["store_bytes"] == raw_b)
+    _save("augmentation", out)
+
+
+# ----------------------------------------------------------------------
 # Async aggregation: sync barrier vs bounded-staleness waves under a
 # 4x straggler (simulated round time + rounds-to-accuracy)
 # ----------------------------------------------------------------------
@@ -531,6 +624,7 @@ ALL = {
     "epochs": bench_epochs,
     "communication": bench_communication,
     "engine": bench_engine,
+    "augmentation": bench_augmentation,
     "async": bench_async,
     "kernels": bench_kernels,
     "roofline": bench_roofline,

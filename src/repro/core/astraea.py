@@ -4,13 +4,27 @@ Workflow (paper Fig. 3):
 
 1. **Initialization** -- clients report label histograms; server computes
    the global distribution.
-2. **Rebalancing** (once, Alg. 2) -- server broadcasts the per-class
+2. **Rebalancing** (Alg. 2) -- server broadcasts the per-class
    augmentation plan; clients augment locally (random affine warps).
 3. Each synchronization round: sample ``c`` online clients, run Alg. 3 to
    greedily pack them into mediators of <= gamma clients (min KLD to
    uniform), train every mediator in parallel (clients sequential inside,
    E_m mediator epochs), and FedAvg-aggregate the mediator deltas with
    weights n_m / n.
+
+``aug_mode`` picks where step 2 executes:
+
+* ``"online"`` (default) -- the plan is handed to the round engine and the
+  resample+warp runs inside the jitted round program, redrawn every round
+  (``augmentation.online_augment_batch``).  No augmented copy is ever
+  materialized: client stores keep the raw federation (zero extra device
+  storage), and Alg. 3 / Eq. 6 run on the expected post-augmentation
+  histograms.  ``planned_extra_frac`` reports what the paper's Fig. 9
+  storage cost *would have been*.
+* ``"materialized"`` -- the historical pre-training host phase: every
+  augmentation is generated up front and the federation rebuilt (the
+  paper's deployment, with its ``extra_storage_frac`` cost).  Kept as the
+  equivalence oracle for online mode.
 
 The round itself is executed by ``core.engine.FLRoundEngine`` (the
 device-resident, mediator-sharded round program); this class owns the
@@ -22,9 +36,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-import jax
-
 from repro.core import augmentation
+from repro.core.augmentation import AUG_MODES
 from repro.core.engine import EngineConfig, FLRoundEngine
 from repro.core.fl import LocalSpec
 from repro.data.federated import FederatedDataset
@@ -42,6 +55,7 @@ class AstraeaTrainer:
     local: LocalSpec                        # B, E
     mediator_epochs: int = 1                # E_m
     alpha: float | None = 0.67              # augmentation factor; None = NoAug
+    aug_mode: str | None = "online"         # "online" | "materialized" | None
     use_kernel_agg: bool = False
     reschedule_every_round: bool = False    # static client data -> schedule once
     store: str = "replicated"               # client-store placement policy
@@ -56,20 +70,14 @@ class AstraeaTrainer:
     history: list[dict] = field(default_factory=list)
 
     def __post_init__(self):
-        key = jax.random.PRNGKey(self.seed)
-        # ---- Rebalancing phase (Alg. 2), once at initialization ----
-        if self.alpha is not None:
-            cx, cy, plan, extra = augmentation.rebalance_federation(
-                jax.random.fold_in(key, 17), self.data.client_images,
-                self.data.client_labels, self.data.num_classes, self.alpha)
-            self.data = FederatedDataset(cx, cy, self.data.test_images,
-                                         self.data.test_labels,
-                                         self.data.num_classes, self.data.name)
-            self.augmentation_plan = plan
-            self.extra_storage_frac = extra
-        else:
-            self.augmentation_plan = None
-            self.extra_storage_frac = 0.0
+        # ---- Rebalancing phase (Alg. 2), shared with FedAvgTrainer ----
+        phase = augmentation.resolve_aug_mode(self.data, self.alpha,
+                                              self.aug_mode, self.seed)
+        self.data = phase.data
+        self.augmentation_plan = phase.plan
+        self.extra_storage_frac = phase.extra_storage_frac  # realized
+        self.planned_extra_frac = phase.planned_extra_frac  # avoided (online)
+        engine_plan = phase.engine_plan
 
         # donate_params=False: the historical trainer API let callers keep
         # references to trainer.params across rounds; donation (the engine
@@ -85,7 +93,12 @@ class AstraeaTrainer:
                 reschedule_every_round=self.reschedule_every_round,
                 store=self.store, pad_mediators_to=pad_m,
                 donate_params=False, seed=self.seed),
-            mesh=self.mesh)
+            mesh=self.mesh, aug_plan=engine_plan)
+        if phase.mode == "materialized":
+            # online mode charges this inside the engine; the materialized
+            # phase broadcast the same plan before the engine existed
+            self.engine.comm.plan_broadcast(self.data.num_classes,
+                                            self.data.num_clients)
         if self.async_spec is not None:
             from repro.core.async_engine import AsyncRoundEngine
             self.runner = AsyncRoundEngine(self.engine, self.async_spec)

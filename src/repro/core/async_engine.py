@@ -48,6 +48,15 @@ slot-masked into exact no-ops) and applies the same Eq. 6 reduction. This
 is asserted, on 1 and 4 forced host devices, in
 ``tests/test_async_engine.py``.
 
+Online augmentation: a wave runs the engine's one traced program, so the
+in-round resample+warp (``core/augmentation.online_augment_batch``) rides
+along unchanged.  The augmentation keys fork off the engine's round-indexed
+``_round_keys`` stream per mediator row -- never off wave membership -- so
+a mediator draws the same augmentations whichever wave executes it, and
+S=0 stays bitwise-identical to the synchronous engine with augmentation
+enabled (``num_round_traces`` stays 1 across waves too; asserted in
+tests/test_online_aug.py).
+
 Execution note: each wave executes the full padded-M program with
 non-member rows masked, trading simulator FLOPs for trace stability
 (``num_round_traces == 1`` across waves and reschedules) and bit-fidelity.

@@ -15,10 +15,31 @@ The paper's key subtlety, which we preserve exactly: the augmentation count
 is a *function of the class's global count*, so a large ``alpha`` (e.g. 2)
 overshoots ``C_bar`` for very-minority classes and re-imbalances the data --
 EXPERIMENTS.md reproduces that failure mode.
+
+Two execution modes share the plan math:
+
+* **Materialized** (``rebalance_federation``) -- the historical pre-training
+  phase: every augmented copy is generated up front into host numpy and the
+  federation is rebuilt.  Faithful to the paper's deployment (clients store
+  their augmentations, the ~24% extra-storage cost of Fig. 9) and kept as
+  the equivalence oracle for the online mode.
+* **Online** (``online_augment_batch``) -- the device-resident pipeline:
+  nothing is materialized; each round the jitted round program redraws a
+  fixed-shape, class-conditional resample+warp of every scheduled client's
+  padded batch.  Each output slot draws its source sample from a seeded
+  categorical with per-sample weights ``mask * (1 + n_aug[y])`` and is then
+  warped with probability ``n_aug[y] / (1 + n_aug[y])`` -- so the expected
+  class mixture of the draws is exactly ``planned_counts`` (normalized) and
+  the expected raw-vs-warped composition matches Alg. 2's ``C_y`` originals
+  + ``C_y * n_aug_y`` copies, while every shape stays static (one round
+  trace).  Stores keep the *raw* clients: per-device bytes fall back to the
+  pre-augmentation packed size.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +59,22 @@ def augmentation_plan(global_counts: np.ndarray, alpha: float) -> np.ndarray:
 
     Returns an int array ``(num_classes,)``: 0 for classes at/above the mean
     (not in the augmentation set), else ``round((C_bar / C_i) ** alpha)``.
+
+    Alg. 2 line 3 edge case, handled explicitly: a class with ``C_i == 0``
+    is *below* the mean (it enters the augmentation set) but there is no
+    sample to warp, so its plan entry is 0 by construction -- not by the
+    accident of a division guard.  ``C_bar`` still averages over ALL
+    classes, empty ones included, exactly as the paper's line 1 does.
     """
     counts = np.asarray(global_counts, np.float64)
+    if counts.ndim != 1:
+        raise ValueError(f"global_counts must be 1-D, got shape {counts.shape}")
     c_bar = counts.mean()
-    with np.errstate(divide="ignore"):
-        factor = np.where(counts > 0, (c_bar / np.maximum(counts, 1.0)) ** alpha, 0.0)
-    n_aug = np.rint(factor).astype(np.int64)
-    n_aug[counts >= c_bar] = 0
+    n_aug = np.zeros(counts.shape, np.int64)
+    # the augmentation set: minority classes that actually have samples --
+    # an empty class contributes nothing to warp (explicit, tested)
+    grow = (counts > 0) & (counts < c_bar)
+    n_aug[grow] = np.rint((c_bar / counts[grow]) ** alpha).astype(np.int64)
     return n_aug
 
 
@@ -52,6 +82,14 @@ def planned_counts(global_counts: np.ndarray, alpha: float) -> np.ndarray:
     """Post-augmentation expected global counts (used by tests + EXPERIMENTS)."""
     counts = np.asarray(global_counts, np.float64)
     return counts * (1 + augmentation_plan(counts, alpha))
+
+
+def online_mixture(global_counts: np.ndarray, alpha: float) -> np.ndarray:
+    """Expected class distribution of ONE online draw from data with
+    ``global_counts``: exactly ``planned_counts`` normalized to 1 (each draw
+    picks sample ``i`` with probability proportional to ``1 + n_aug[y_i]``)."""
+    planned = planned_counts(global_counts, alpha)
+    return planned / max(planned.sum(), 1.0)
 
 
 # --------------------------------------------------------------------------
@@ -142,6 +180,148 @@ def rebalance_client(key: Array, images: np.ndarray, labels: np.ndarray,
     out_y = np.concatenate([labels, labels[reps]])
     perm = rng.permutation(out_x.shape[0])
     return out_x[perm], out_y[perm]
+
+
+# --------------------------------------------------------------------------
+# Online (in-round) augmentation -- the device-resident Alg. 2 pipeline.
+# Everything below is jit-native with static shapes: it runs INSIDE the
+# engine's compiled round program (core/engine.py), once per mediator slot
+# per round, so reschedules and rounds never re-trace.
+# --------------------------------------------------------------------------
+
+# salt folded into a mediator's round key to derive its augmentation stream
+# (independent of the training stream split from the same key). The async
+# engine reuses the engine's round-indexed keys for every wave, so a
+# mediator's augmentation draw does not depend on which wave runs it --
+# which is what keeps S=0 bitwise-identical to the synchronous engine with
+# augmentation enabled.
+AUG_SALT = 0x617567          # "aug"
+
+WARP_IMPLS = ("auto", "reference", "pallas")
+
+
+def warp_params(key: Array, n: int, *, shift: float = 3.0, rot: float = 0.3,
+                shear: float = 0.2, zoom: float = 0.15):
+    """``n`` independent random affine parameter draws: (n,2,2) mats +
+    (n,2) translations, the batched form of ``_affine_params``."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _affine_params(
+        k, shift=shift, rot=rot, shear=shear, zoom=zoom))(keys)
+
+
+def warp_batch(key: Array, images: Array, *, impl: str = "auto",
+               order: int = 1, **kw) -> Array:
+    """One random affine warp of every image in ``(B, H, W, C)``, fused.
+
+    ``impl`` picks the resampler: ``"reference"`` is the vectorized
+    ``map_coordinates`` oracle (``kernels/ref.py``), ``"pallas"`` the fused
+    one-launch bilinear-warp kernel (``kernels/affine_warp.py``,
+    interpret-mode off-TPU), ``"auto"`` resolves to the kernel on TPU and
+    the reference elsewhere (interpret-mode Pallas in a hot CPU round loop
+    would be strictly slower than XLA's fused gather).
+    """
+    from repro.kernels import ref as kref
+    mats, trans = warp_params(key, images.shape[0], **kw)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "pallas":
+        if order != 1:
+            raise ValueError("the pallas warp kernel is bilinear (order=1)")
+        from repro.kernels import ops as kops
+        return kops.affine_warp(images, mats, trans)
+    if impl != "reference":
+        raise ValueError(f"unknown warp impl {impl!r}; expected one of "
+                         f"{WARP_IMPLS}")
+    return kref.affine_warp(images, mats, trans, order=order)
+
+
+def online_augment_batch(key: Array, x: Array, y: Array, mask: Array,
+                         plan: Array, *, impl: str = "auto", order: int = 1,
+                         **kw) -> tuple[Array, Array]:
+    """Fixed-shape class-conditional resample+warp of one padded client batch.
+
+    ``x (pad, H, W, C)`` / ``y (pad,)`` / ``mask (pad,)`` are the client's
+    packed slot tensors; ``plan (num_classes,)`` is the server's broadcast
+    ``n_aug`` array.  Every output slot draws a source sample from the
+    seeded categorical with weights ``mask * (1 + plan[y])`` -- sample
+    ``i``'s post-augmentation multiplicity -- and the draw is a warped copy
+    with probability ``plan[y] / (1 + plan[y])`` (of the ``1 + n_aug``
+    copies of a class-``y`` sample, ``n_aug`` are augmentations).  Hence
+
+    * expected class mixture of the draws == ``planned_counts`` normalized
+      (``online_mixture``), exactly;
+    * expected warped fraction within class ``y`` == ``n_aug_y/(1+n_aug_y)``,
+      matching Alg. 2's originals-plus-copies composition;
+    * shapes (and the round trace) are static; the caller's mask is
+      returned unchanged semantics-wise (an all-dummy slot stays an exact
+      no-op: all weights 0 keeps the loss mask 0 regardless of content).
+
+    Returns ``(x_drawn, y_drawn)``; the mask is unchanged by construction.
+    """
+    plan_f = jnp.asarray(plan).astype(jnp.float32)
+    mult = 1.0 + plan_f[y]                         # per-sample multiplicity
+    w = mask * mult
+    k_sel, k_flag, k_warp = jax.random.split(key, 3)
+    logits = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
+    idx = jax.random.categorical(k_sel, logits, shape=(y.shape[0],))
+    # all-padding slot row (dummy client): every logit is -inf and the
+    # categorical degenerates -- pin the gather to row 0 (masked anyway)
+    idx = jnp.where(jnp.any(w > 0), idx, 0)
+    sx = jnp.take(x, idx, axis=0)
+    sy = jnp.take(y, idx, axis=0)
+    s_mult = 1.0 + plan_f[sy]
+    p_aug = (s_mult - 1.0) / s_mult                # n_aug / (1 + n_aug)
+    is_aug = jax.random.uniform(k_flag, p_aug.shape) < p_aug
+    warped = warp_batch(k_warp, sx, impl=impl, order=order, **kw)
+    sel = is_aug.reshape(is_aug.shape + (1,) * (x.ndim - 1))
+    return jnp.where(sel, warped, sx), sy
+
+
+AUG_MODES = (None, "online", "materialized")
+
+
+class AugPhase(NamedTuple):
+    """Resolved Alg. 2 initialization phase (``resolve_aug_mode``)."""
+    data: object                    # FederatedDataset (rebuilt if materialized)
+    plan: np.ndarray | None         # the server's n_aug array (None = NoAug)
+    engine_plan: np.ndarray | None  # plan to hand the round engine (online)
+    extra_storage_frac: float       # realized (materialized mode only)
+    planned_extra_frac: float       # what materializing would cost
+    mode: str | None                # effective mode after the alpha gate
+
+
+def resolve_aug_mode(data, alpha: float | None, aug_mode: str | None,
+                     seed: int) -> AugPhase:
+    """Shared trainer-side resolution of the rebalancing phase.
+
+    Both ``AstraeaTrainer`` and ``FedAvgTrainer`` route through here so the
+    mode semantics can never drift between them: ``alpha=None`` disables
+    augmentation regardless of ``aug_mode``; ``"materialized"`` rebuilds the
+    federation up front (keyword ``dataclasses.replace``, never positional);
+    ``"online"`` returns the plan for the engine's in-round pipeline.  An
+    all-zero online plan (already-balanced federation, or alpha small
+    enough that every count rounds to 0 copies) resolves to NO engine plan:
+    there is nothing to augment, so the round program must stay the exact
+    no-aug executable rather than pay a resample+warp that selects nothing.
+    """
+    if aug_mode not in AUG_MODES:
+        raise ValueError(f"unknown aug_mode {aug_mode!r}; "
+                         f"expected one of {AUG_MODES}")
+    mode = aug_mode if alpha is not None else None
+    if mode is None:
+        return AugPhase(data, None, None, 0.0, 0.0, None)
+    counts = data.client_counts().sum(axis=0)
+    planned = planned_counts(counts, alpha)
+    planned_frac = float(planned.sum() / max(counts.sum(), 1.0) - 1.0)
+    if mode == "materialized":
+        cx, cy, plan, extra = rebalance_federation(
+            jax.random.fold_in(jax.random.PRNGKey(seed), 17),
+            data.client_images, data.client_labels, data.num_classes, alpha)
+        data = dataclasses.replace(data, client_images=cx, client_labels=cy)
+        return AugPhase(data, plan, None, extra, planned_frac, mode)
+    plan = augmentation_plan(counts, alpha)
+    engine_plan = plan if plan.any() else None
+    return AugPhase(data, plan, engine_plan, 0.0, planned_frac, mode)
 
 
 def rebalance_federation(key: Array, client_images: list[np.ndarray],

@@ -40,6 +40,14 @@ most of its clients -- minimizing occupied ``all_gather`` slots (the
 cross-shard fetch count is surfaced in ``last_placement_stats``). The
 serve capacity is the static worst case ``min(M_pad * gamma, K_local)``,
 so reschedules at fixed M never change shapes and never re-jit.
+
+Augmentation note: stores always hold the federation **as packed** -- they
+never see augmented copies.  Under the online rebalancing pipeline the
+engine augments inside the round program, so per-device residency stays at
+the raw pre-augmentation size under every policy; only the historical
+materialized mode inflates what arrives here (because the *trainer*
+rebuilt the federation before packing).  ``stats()`` surfaces the
+policy/residency pair the benchmarks and byte tests audit.
 """
 from __future__ import annotations
 
@@ -94,6 +102,12 @@ class ClientStore:
 
     def per_device_bytes(self) -> int:
         raise NotImplementedError
+
+    def stats(self) -> dict:
+        """Residency audit row: policy + per-device bytes (benchmarks and
+        the online-aug byte tests compare this against the raw pack)."""
+        return {"policy": self.policy,
+                "per_device_bytes": self.per_device_bytes()}
 
 
 class ReplicatedStore(ClientStore):

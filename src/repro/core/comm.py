@@ -25,6 +25,10 @@ Two accounting granularities share one ledger:
 ``end_round`` snapshots the cumulative total into ``round_log`` so every
 synchronization round leaves an auditable WAN-bytes trail (the paper's 82%
 Table III claim is a ratio of these ledgers).
+
+Alg. 2's one-off server->client plan broadcast (``plan_broadcast``) is
+charged at initialization whenever augmentation is enabled -- a few hundred
+bytes against megabyte model legs, but the ledger stays complete.
 """
 from __future__ import annotations
 
@@ -48,6 +52,15 @@ class CommMeter:
     @property
     def megabytes(self) -> float:
         return self.total_bytes / 2 ** 20
+
+    # ---- one-off accounting ----
+    def plan_broadcast(self, num_entries: int, num_clients: int,
+                       bytes_per_entry: int = 4) -> None:
+        """Alg. 2 server->client broadcast of the per-class augmentation
+        plan: a ``(num_classes,)`` int32 array down to every client, once
+        at initialization.  Tiny next to a single model leg, but the WAN
+        ledger is only auditable if every message is on it."""
+        self.total_bytes += num_entries * bytes_per_entry * num_clients
 
     # ---- per-round accounting (synchronous engine) ----
     def fedavg_round(self, c: int) -> None:

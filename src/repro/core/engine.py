@@ -55,6 +55,20 @@ What makes it an engine rather than a trainer loop:
    mediators outside it (exact no-ops, like dummy mediators), so the one
    trace serves every wave of every reschedule and ``num_round_traces``
    stays 1 for an async engine too.
+7. **Online rebalancing.** When the engine is built with an ``aug_plan``
+   (the server's tiny ``(num_classes,)`` Alg. 2 array, broadcast once and
+   fed into the shard_map as a replicated operand), each mediator row's
+   per-slot data is passed through ``augmentation.online_augment_batch``
+   INSIDE the row program before training: a fixed-shape class-conditional
+   resample+warp redrawn every round from round-indexed keys.  The store
+   keeps the *raw* clients (per-device bytes stay at the pre-augmentation
+   packed size under every placement policy), Alg. 3 schedules on the
+   expected post-augmentation histograms ``counts * (1 + plan)``, and the
+   Eq. 6 weights become the expected post-augmentation sizes
+   ``sum(mask * (1 + plan[y]))``.  Since the hook lives inside the jitted
+   round, augmentation adds zero traces: ``num_round_traces`` stays 1,
+   including across async waves (aug keys derive from the per-row round
+   keys, never from wave membership).
 
 Bit-identity guarantees: every store feeds identical per-slot values into
 identical per-row programs (gathers move exact bits), the sharded store's
@@ -82,7 +96,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import scheduling
+from repro.core import augmentation, scheduling
 from repro.core.client_store import POLICIES, build_client_store
 from repro.core.comm import CommMeter
 from repro.core.fl import (LocalSpec, evaluate, make_client_update,
@@ -118,6 +132,10 @@ class EngineConfig:
     # batching picks different reduction strategies per batch size, so vmap
     # is only bit-stable at a fixed mesh; see tests/test_client_store.py)
     row_exec: str = "vmap"
+    # resampler for the online-augmentation warp (augmentation.warp_batch):
+    # "auto" = the fused Pallas kernel on TPU, the map_coordinates
+    # reference elsewhere; only consulted when the engine holds an aug plan
+    warp_impl: str = "auto"
     use_kernel_agg: bool = False
     reschedule_every_round: bool = False
     donate_params: bool = True
@@ -136,6 +154,9 @@ class EngineConfig:
                              f"expected one of {POLICIES}")
         if self.row_exec not in ("vmap", "map"):
             raise ValueError(f"unknown row_exec {self.row_exec!r}")
+        if self.warp_impl not in augmentation.WARP_IMPLS:
+            raise ValueError(f"unknown warp_impl {self.warp_impl!r}; "
+                             f"expected one of {augmentation.WARP_IMPLS}")
         if self.aggregate == "weights" and self.gamma != 1:
             raise ValueError("weight aggregation implies gamma=1 (FedAvg)")
         if self.pad_mediators_to is not None and self.pad_mediators_to < 1:
@@ -163,7 +184,8 @@ class FLRoundEngine:
 
     def __init__(self, model: Model, opt: Optimizer, data: FederatedDataset,
                  cfg: EngineConfig, *, mesh=None,
-                 loss_fn: Callable | None = None):
+                 loss_fn: Callable | None = None,
+                 aug_plan: np.ndarray | None = None):
         self.model, self.opt, self.data, self.cfg = model, opt, data, cfg
         self.mesh = mesh if mesh is not None else make_mediator_mesh()
         self._msize = int(self.mesh.shape["mediator"])
@@ -171,7 +193,9 @@ class FLRoundEngine:
         sizes = [x.shape[0] for x in data.client_images]
         pad = _pad_multiple(max(sizes), cfg.local.batch_size)
         # packed ONCE into the placement-policy store (replicated buffers,
-        # client-sharded buffers, or host RAM -- see core/client_store.py)
+        # client-sharded buffers, or host RAM -- see core/client_store.py).
+        # With online augmentation the store holds the RAW clients: the
+        # warped copies only ever exist inside the round program.
         xs, ys, mask = data.padded(pad)
         self.store = build_client_store(
             cfg.store, xs, ys, mask, self.mesh,
@@ -186,6 +210,24 @@ class FLRoundEngine:
         self.params = jax.device_put(model.init(jax.random.PRNGKey(cfg.seed)),
                                      replicated)
         self.comm = CommMeter(count_params(self.params))
+
+        # ---- online-rebalancing plan (Alg. 2, device-resident mode) ----
+        if aug_plan is not None:
+            plan_np = np.asarray(aug_plan)
+            if plan_np.shape != (data.num_classes,):
+                raise ValueError(
+                    f"aug_plan shape {plan_np.shape} != ({data.num_classes},)")
+            self._aug_plan = jax.device_put(
+                jnp.asarray(plan_np, jnp.int32), replicated)
+            # Alg. 3 packs mediators by the histograms clients WILL train
+            # on: the expected post-augmentation counts (the materialized
+            # mode sees the same thing through its inflated client data)
+            self._counts = self._counts * (1.0 + plan_np.astype(np.float64))
+            # the plan broadcast is WAN traffic: (num_classes,) int32 down
+            # to every client, once at initialization
+            self.comm.plan_broadcast(plan_np.size, data.num_clients)
+        else:
+            self._aug_plan = None
         self.history: list[dict] = []
         self.last_schedule_stats: dict | None = None
         self.num_schedule_packs = 0             # host packing events (bench)
@@ -210,6 +252,8 @@ class FLRoundEngine:
                                                    loss_fn=loss_fn)
         P_med = P("mediator")
         replicated = replicated_sharding(self.mesh)
+        use_aug = self._aug_plan is not None
+        aug_plan_dev = self._aug_plan
 
         def _rows(fn, params, *batched):
             if cfg.row_exec == "map":
@@ -217,26 +261,64 @@ class FLRoundEngine:
             return jax.vmap(fn, in_axes=(None,) + (0,) * len(batched))(
                 params, *batched)
 
-        def _train(params, data, plan, slot, keys):
+        def _aug_one(key, x, y, m, aplan):
+            # the augmentation stream forks off the row's round key with a
+            # salt, leaving the training stream (split from the same key
+            # inside the update) untouched
+            return augmentation.online_augment_batch(
+                jax.random.fold_in(key, augmentation.AUG_SALT), x, y, m,
+                aplan, impl=cfg.warp_impl)
+
+        def _train(params, data, plan, slot, keys, *aug):
             # plan/slot/keys arrive as this device's (M_local, ...) shards;
             # the store resolves them against its resident client buffers.
+            # aug, when present, is the replicated (num_classes,) Alg. 2
+            # plan; the resample+warp runs INSIDE the per-row program so
+            # row_exec="map" keeps its batch-size-invariant bit-identity.
             xs, ys, ms_raw = store.slot_data(data, plan)
             if parallel_clients:
                 ms = ms_raw[:, 0] * slot[:, :1]
-                outs = _rows(client_update, params, xs[:, 0], ys[:, 0], ms,
-                             keys)
-                return outs, ms.sum(axis=1)
+                row_fn = client_update
+                weights = ms.sum(axis=1)
+                if use_aug:
+                    (aplan,) = aug
+                    def row_fn(p, x, y, m, k):           # noqa: F811
+                        ax, ay = _aug_one(k, x, y, m, aplan)
+                        return client_update(p, ax, ay, m, k)
+                    # Eq. 6 over the expected post-augmentation sizes
+                    weights = (ms * (1.0 + aplan.astype(jnp.float32)[ys[:, 0]])
+                               ).sum(axis=1)
+                outs = _rows(row_fn, params, xs[:, 0], ys[:, 0], ms, keys)
+                return outs, weights
             ms = ms_raw * slot[..., None]
-            outs = _rows(mediator_update, params, xs, ys, ms, keys)
-            return outs, ms.sum(axis=(1, 2))
+            row_fn = mediator_update
+            weights = ms.sum(axis=(1, 2))
+            if use_aug:
+                (aplan,) = aug
+                def row_fn(p, xr, yr, mr, k):            # noqa: F811
+                    aks = jax.random.split(
+                        jax.random.fold_in(k, augmentation.AUG_SALT),
+                        xr.shape[0])
+                    ax, ay = jax.vmap(
+                        lambda kk, x, y, m: augmentation.online_augment_batch(
+                            kk, x, y, m, aplan, impl=cfg.warp_impl)
+                    )(aks, xr, yr, mr)
+                    return mediator_update(p, ax, ay, mr, k)
+                weights = (ms * (1.0 + aplan.astype(jnp.float32)[ys])
+                           ).sum(axis=(1, 2))
+            outs = _rows(row_fn, params, xs, ys, ms, keys)
+            return outs, weights
 
+        aug_specs = (P(),) if use_aug else ()
         train = shard_map(_train, self.mesh,
                           in_specs=(P(), store.data_specs, store.plan_specs,
-                                    P_med, P_med),
+                                    P_med, P_med) + aug_specs,
                           out_specs=(P_med, P_med), manual_axes=("mediator",))
 
         def trained_rows(params, data, plan, unperm, slot, keys):
-            stacked, weights = train(params, data, plan, slot, keys)
+            aug_args = (aug_plan_dev,) if use_aug else ()
+            stacked, weights = train(params, data, plan, slot, keys,
+                                     *aug_args)
             if store.permutes_rows:             # undo locality placement
                 stacked = jax.tree.map(lambda a: a[unperm], stacked)
                 weights = weights[unperm]

@@ -7,11 +7,17 @@ aggregates with weights n_k / n (Eq. 6).
 FedAvg is the ``gamma=1`` + random-singleton-schedule + full-weight
 aggregation configuration of ``core.engine.FLRoundEngine``; this class is a
 thin wrapper presenting the historical trainer API.
+
+``alpha`` enables the paper's "augmentation-only" ablation (Alg. 2 without
+mediators): ``aug_mode="online"`` hands the plan to the round engine (the
+device-resident resample+warp, zero extra storage), ``"materialized"``
+rebuilds the federation up front like the historical Astraea phase.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.core import augmentation
 from repro.core.engine import EngineConfig, FLRoundEngine
 from repro.core.fl import LocalSpec
 from repro.data.federated import FederatedDataset
@@ -26,6 +32,8 @@ class FedAvgTrainer:
     data: FederatedDataset
     clients_per_round: int           # c
     local: LocalSpec                 # B, E
+    alpha: float | None = None       # Alg. 2 factor; None = plain FedAvg
+    aug_mode: str | None = "online"  # "online" | "materialized" | None
     store: str = "replicated"        # client-store placement policy
     # padded mediator count; defaults to c (gamma=1) so the per-round
     # random reschedule never re-jits the round executable
@@ -39,6 +47,13 @@ class FedAvgTrainer:
     history: list[dict] = field(default_factory=list)
 
     def __post_init__(self):
+        # ---- Rebalancing phase (Alg. 2), shared with AstraeaTrainer ----
+        phase = augmentation.resolve_aug_mode(self.data, self.alpha,
+                                              self.aug_mode, self.seed)
+        self.data = phase.data
+        self.augmentation_plan = phase.plan
+        self.extra_storage_frac = phase.extra_storage_frac
+        self.planned_extra_frac = phase.planned_extra_frac
         # donate_params=False: see AstraeaTrainer -- historical callers may
         # hold references to trainer.params across rounds
         pad_m = self.pad_mediators_to or \
@@ -49,7 +64,11 @@ class FedAvgTrainer:
                                 local=self.local, store=self.store,
                                 pad_mediators_to=pad_m, donate_params=False,
                                 seed=self.seed),
-            mesh=self.mesh, loss_fn=self.loss_fn)
+            mesh=self.mesh, loss_fn=self.loss_fn,
+            aug_plan=phase.engine_plan)
+        if phase.mode == "materialized":
+            self.engine.comm.plan_broadcast(self.data.num_classes,
+                                            self.data.num_clients)
         if self.async_spec is not None:
             from repro.core.async_engine import AsyncRoundEngine
             self.runner = AsyncRoundEngine(self.engine, self.async_spec)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import affine_warp as _aw
 from repro.kernels import fedavg_agg as _fa
 from repro.kernels import flash_attention as _fl
 from repro.kernels import kld_score as _kl
@@ -69,6 +70,14 @@ def fedavg_agg_tree(deltas_tree: PyTree, weights: jax.Array, *,
         outs.append(agg[start:start + size].reshape(l.shape[1:]).astype(l.dtype))
         start += size
     return jax.tree.unflatten(treedef, outs)
+
+
+def affine_warp(images: jax.Array, mats: jax.Array, trans: jax.Array,
+                **kw) -> jax.Array:
+    """Fused batched bilinear warp: images (B, H, W, C), inverse-map mats
+    (B, 2, 2), translations (B, 2) -- the Alg. 2 augmentation primitive."""
+    kw.setdefault("interpret", _interpret())
+    return _aw.affine_warp(images, mats, trans, **kw)
 
 
 def kld_score(mediator_counts: jax.Array, client_counts: jax.Array, **kw) -> jax.Array:

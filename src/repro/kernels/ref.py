@@ -15,6 +15,31 @@ def fedavg_agg(deltas: Array, weights: Array) -> Array:
     return jnp.einsum("m,mn->n", wn, deltas.astype(jnp.float32)).astype(deltas.dtype)
 
 
+def affine_warp(images: Array, mats: Array, trans: Array, *,
+                order: int = 1) -> Array:
+    """Batched inverse-mapped affine warp, the ``map_coordinates`` oracle.
+
+    ``images (B, H, W, C)``; ``mats (B, 2, 2)`` inverse maps (output grid ->
+    input coords, about the image center); ``trans (B, 2)`` translations.
+    Bilinear (``order=1``) with ``mode="constant"`` zero fill -- the exact
+    semantics the fused Pallas kernel (kernels/affine_warp.py) reproduces.
+    """
+    def one(img, mat, tr):
+        h, w, c = img.shape
+        yy, xx = jnp.meshgrid(jnp.arange(h, dtype=jnp.float32),
+                              jnp.arange(w, dtype=jnp.float32), indexing="ij")
+        cy, cx = (h - 1) / 2.0, (w - 1) / 2.0
+        src = jnp.tensordot(mat, jnp.stack([yy - cy, xx - cx]), axes=1)
+        sy = src[0] + cy + tr[0]
+        sx = src[1] + cx + tr[1]
+        return jnp.stack(
+            [jax.scipy.ndimage.map_coordinates(img[..., i], [sy, sx],
+                                               order=order, mode="constant")
+             for i in range(c)], axis=-1)
+
+    return jax.vmap(one)(images, mats, trans)
+
+
 def kld_score(mediator_counts: Array, client_counts: Array) -> Array:
     """Alg. 3 scores: D_KL(normalize(P_m + P_k) || U) for each candidate k."""
     merged = mediator_counts[None, :].astype(jnp.float32) + client_counts.astype(jnp.float32)

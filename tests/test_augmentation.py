@@ -58,6 +58,97 @@ def test_rebalance_client_counts(key):
     assert x.shape[0] == y.shape[0]
 
 
+def test_plan_empty_class_explicit():
+    """Alg. 2 line 3 edge case: an empty class is below the mean (it joins
+    the augmentation set) but holds nothing to warp -- its plan entry must
+    be 0 by construction, while C_bar still averages over ALL classes."""
+    counts = np.array([0, 100, 90, 10, 0])
+    plan = aug.augmentation_plan(counts, 0.67)
+    assert plan[0] == 0 and plan[4] == 0                 # empty: explicit 0
+    assert plan[3] > 0                                   # minority: augmented
+    c_bar = counts.mean()                                # 40, over 5 classes
+    assert all(plan[(counts >= c_bar)] == 0)
+    # planned counts keep empty classes empty -- augmentation cannot invent
+    # samples for a class nobody holds
+    planned = aug.planned_counts(counts, 0.67)
+    assert planned[0] == 0 and planned[4] == 0
+    # all-empty federation degenerates to the zero plan, not an error
+    assert np.all(aug.augmentation_plan(np.zeros(4), 0.67) == 0)
+    with pytest.raises(ValueError, match="1-D"):
+        aug.augmentation_plan(np.zeros((2, 2)), 0.67)
+
+
+def _mc_class_freqs(counts, alpha, *, n_batches=48, seed=0):
+    """Monte Carlo class frequencies of online draws from a client whose
+    local counts equal ``counts`` (pad = sum counts, all slots valid)."""
+    counts = np.asarray(counts, int)
+    labels = np.repeat(np.arange(counts.size), counts).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    images = rng.normal(size=(labels.size, 6, 6, 1)).astype(np.float32)
+    plan = jnp.asarray(aug.augmentation_plan(counts, alpha))
+    mask = jnp.ones(labels.size, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_batches)
+    fn = jax.jit(jax.vmap(lambda k: aug.online_augment_batch(
+        k, jnp.asarray(images), jnp.asarray(labels), mask, plan)[1]))
+    drawn = np.asarray(fn(keys)).ravel()
+    return np.bincount(drawn, minlength=counts.size) / drawn.size
+
+
+def test_online_expected_counts_match_planned(key):
+    """The Alg. 2 consistency contract of online mode: the expected class
+    mixture of the in-round draws is exactly planned_counts(counts, alpha)
+    normalized (seeded Monte Carlo, tolerance ~3 sigma)."""
+    counts = np.array([40, 20, 8, 4])
+    alpha = 0.67
+    freqs = _mc_class_freqs(counts, alpha)
+    planned = aug.planned_counts(counts, alpha)
+    expect = planned / planned.sum()
+    np.testing.assert_allclose(freqs, expect, atol=0.03)
+    np.testing.assert_allclose(np.asarray(aug.online_mixture(counts, alpha)),
+                               expect)
+
+
+def test_online_alpha_two_overshoot_reproduced():
+    """The paper's alpha=2 failure mode, in ONLINE mode: the very-minority
+    class overshoots past the mean and re-imbalances the drawn mixture."""
+    counts = np.array([100, 50, 20, 5, 1])
+    f_good = _mc_class_freqs(counts, 0.67, seed=1)
+    f_bad = _mc_class_freqs(counts, 2.0, seed=1)
+    # at alpha=2 the rarest class dominates the draws outright
+    assert f_bad[-1] > 1.0 / counts.size            # overshot uniform share
+    assert f_bad[-1] == f_bad.max()                 # ...and every class
+    kld = lambda f: float(dist.kld_to_uniform(jnp.asarray(f * 1000.0)))
+    assert kld(f_bad) > kld(f_good)                 # re-imbalanced
+
+
+def test_online_zero_plan_is_pure_resample(key):
+    """With an all-zero plan no draw is ever warped: every output slot is a
+    bitwise copy of some input sample (determinism anchor for the engine's
+    no-op guarantees)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(20, 6, 6, 1)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 3, 20).astype(np.int32))
+    mask = jnp.ones(20, jnp.float32)
+    ax, ay = aug.online_augment_batch(key, x, y, mask,
+                                      jnp.zeros(3, jnp.int32))
+    ax, ay = np.asarray(ax), np.asarray(ay)
+    xs = np.asarray(x)
+    for i in range(ax.shape[0]):
+        src = np.flatnonzero((xs == ax[i]).all(axis=(1, 2, 3)))
+        assert src.size >= 1 and np.asarray(y)[src[0]] == ay[i]
+
+
+def test_online_dummy_slot_stays_noop(key):
+    """An all-padding client (mask 0 everywhere) must not produce NaNs or
+    out-of-range gathers -- the engine relies on masked no-ops."""
+    x = jnp.ones((10, 6, 6, 1), jnp.float32)
+    y = jnp.zeros(10, jnp.int32)
+    ax, ay = aug.online_augment_batch(key, x, y, jnp.zeros(10, jnp.float32),
+                                      jnp.asarray([3, 0], jnp.int32))
+    assert np.isfinite(np.asarray(ax)).all()
+    assert set(np.asarray(ay).tolist()) <= {0}
+
+
 def test_rebalance_federation_reduces_global_kld(key, tiny_federation):
     fed = tiny_federation
     before = float(dist.kld_to_uniform(

@@ -87,6 +87,33 @@ def test_per_wave_accounting_sums_to_per_round():
     assert waved.total_bytes == whole.total_bytes
 
 
+def test_plan_broadcast_on_the_ledger(model, tiny_federation):
+    """Alg. 2's one-off plan broadcast is WAN traffic: (num_classes,) int32
+    down to every client, charged once at initialization in BOTH
+    augmentation modes, then rounds accrue on top."""
+    m = CommMeter(num_params=1000)
+    m.plan_broadcast(8, 12)
+    assert m.total_bytes == 8 * 4 * 12
+
+    k = tiny_federation.num_clients
+    nc = tiny_federation.num_classes
+    plan_bytes = nc * 4 * k
+    kw = dict(clients_per_round=6, gamma=3, local=LocalSpec(10, 1),
+              alpha=0.67, seed=0, mesh=make_mediator_mesh(1))
+    for mode in ("online", "materialized"):
+        tr = AstraeaTrainer(model, adam(1e-3), tiny_federation,
+                            aug_mode=mode, **kw)
+        assert tr.comm.total_bytes == plan_bytes, mode
+        tr.run_round()
+        w = count_params(tr.params) * 4
+        expect_round = 2 * w * (6 * 1 + math.ceil(6 / 3))
+        assert tr.comm.total_bytes == pytest.approx(plan_bytes + expect_round)
+    # no augmentation -> no plan, no broadcast
+    off = AstraeaTrainer(model, adam(1e-3), tiny_federation,
+                         **{**kw, "alpha": None})
+    assert off.comm.total_bytes == 0
+
+
 def test_async_trainer_traffic_matches_sync(model, tiny_federation):
     """Waves re-partition WHEN bytes move, not how many: an async run's
     ledger equals the synchronous run's after the same number of rounds."""

@@ -130,9 +130,12 @@ def test_astraea_trainer_matches_pre_refactor_run(model, tiny_federation):
     1-device mesh: the reference is a single-device vmap (see (a))."""
     from repro.core.astraea import AstraeaTrainer
     from repro.launch.mesh import make_mediator_mesh
+    # materialized mode: the pre-refactor trainer augmented up front, so
+    # the legacy reference (which consumes tr.data) needs the same path
     tr = AstraeaTrainer(model, adam(1e-3), tiny_federation,
                         clients_per_round=6, gamma=3, local=LocalSpec(10, 1),
-                        mediator_epochs=2, alpha=0.67, seed=0,
+                        mediator_epochs=2, alpha=0.67,
+                        aug_mode="materialized", seed=0,
                         mesh=make_mediator_mesh(1))
     tr.run_round()
     tr.run_round()

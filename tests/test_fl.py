@@ -102,12 +102,20 @@ def test_astraea_trainer_round_runs(tiny_federation):
     model = emnist_cnn(tiny_federation.num_classes, image_size=16)
     tr = AstraeaTrainer(model, adam(1e-3), tiny_federation, clients_per_round=6,
                         gamma=3, local=LocalSpec(10, 1), mediator_epochs=1,
-                        alpha=0.67, seed=0)
+                        alpha=0.67, aug_mode="materialized", seed=0)
     hist = tr.fit(2, eval_every=2)
     assert hist and 0.0 <= hist[-1]["accuracy"] <= 1.0
     assert tr.last_schedule_stats["num_mediators"] >= 2
-    # augmentation actually added data
+    # materialized augmentation actually added data
     assert tr.extra_storage_frac > 0
+    # the default (online) mode materializes nothing but reports the cost
+    on = AstraeaTrainer(model, adam(1e-3), tiny_federation, clients_per_round=6,
+                        gamma=3, local=LocalSpec(10, 1), mediator_epochs=1,
+                        alpha=0.67, seed=0)
+    assert on.aug_mode == "online" and on.extra_storage_frac == 0
+    assert on.planned_extra_frac == pytest.approx(tr.extra_storage_frac)
+    hist = on.fit(2, eval_every=2)
+    assert hist and 0.0 <= hist[-1]["accuracy"] <= 1.0
 
 
 def test_astraea_kernel_aggregation_matches(tiny_federation):
