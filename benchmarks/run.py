@@ -464,6 +464,81 @@ def bench_augmentation(scale: E.Scale):
 
 
 # ----------------------------------------------------------------------
+# Eq. 6 aggregation on the 2-D mediator x model mesh: fused fedavg_agg
+# kernel vs the replicated weighted-average path (ROADMAP "kernel
+# aggregation at scale")
+# ----------------------------------------------------------------------
+
+_AGG_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.pop("ASTRAEA_MODEL_PARALLEL", None)
+import json, time
+import jax, jax.numpy as jnp
+from repro.core.engine import eq6_aggregate
+from repro.launch.mesh import make_fl_mesh, replicated_sharding
+
+results = {}
+for med, mod in ((4, 1), (2, 2)):
+    mesh = make_fl_mesh(mediator=med, model=mod)
+    rep = replicated_sharding(mesh)
+    for m in (16, 64):
+        key = jax.random.PRNGKey(0)
+        tree = {f"w{i}": jax.device_put(
+                    jax.random.normal(jax.random.fold_in(key, i),
+                                      (m, 1 << 14), jnp.float32), rep)
+                for i in range(4)}
+        wts = jax.device_put(jnp.arange(1.0, m + 1.0), rep)
+        base = jax.jit(lambda t, w: eq6_aggregate(t, w, mesh))
+        kern = jax.jit(lambda t, w: eq6_aggregate(t, w, mesh,
+                                                  use_kernel_agg=True))
+
+        def timeit(fn, n=5):
+            jax.block_until_ready(fn(tree, wts))
+            t0 = time.time()
+            for _ in range(n):
+                jax.block_until_ready(fn(tree, wts))
+            return (time.time() - t0) / n * 1e6
+
+        a, b = base(tree, wts), kern(tree, wts)
+        diff = max(float(jnp.max(jnp.abs(x - y)))
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+        results[f"{med}x{mod}/M{m}"] = {
+            "mesh": f"{med}x{mod}", "mediators": m,
+            "weighted_avg_us": timeit(base), "kernel_us": timeit(kern),
+            "max_abs_diff": diff}
+print("JSON:" + json.dumps(results))
+"""
+
+
+def bench_agg(scale: E.Scale):
+    """``fedavg_agg_tree`` (fused Pallas kernel; interpret mode on this CPU
+    container, Mosaic on TPU) vs the engine's default replicated
+    weighted-average Eq. 6 path, on real 4-device ``4x1`` and ``2x2``
+    meshes (subprocess: the forced device count must precede jax init).
+    Closes the ROADMAP "kernel aggregation at scale" item: the comparison
+    now runs on the multi-device meshes the engine actually deploys, not
+    only single-device microbenchmarks."""
+    import subprocess
+    import sys
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _AGG_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    line = next(l for l in proc.stdout.splitlines() if l.startswith("JSON:"))
+    results = json.loads(line[len("JSON:"):])
+    for name, row in results.items():
+        _emit(f"agg/{name}/kernel", row["kernel_us"],
+              f"weighted_avg_us={row['weighted_avg_us']:.1f};"
+              f"speedup={row['weighted_avg_us'] / row['kernel_us']:.2f}x;"
+              f"max_abs_diff={row['max_abs_diff']:.2e} "
+              f"(interpret mode on CPU; kernel targets TPU Mosaic)")
+    _save("agg", results)
+
+
+# ----------------------------------------------------------------------
 # Async aggregation: sync barrier vs bounded-staleness waves under a
 # 4x straggler (simulated round time + rounds-to-accuracy)
 # ----------------------------------------------------------------------
@@ -625,6 +700,7 @@ ALL = {
     "communication": bench_communication,
     "engine": bench_engine,
     "augmentation": bench_augmentation,
+    "agg": bench_agg,
     "async": bench_async,
     "kernels": bench_kernels,
     "roofline": bench_roofline,

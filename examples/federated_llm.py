@@ -4,9 +4,17 @@ The paper's mediators/rescheduling applied to an assigned architecture
 (reduced variant on CPU; the same `make_fl_round` program lowers on the
 production (pod, data, model) mesh -- see EXPERIMENTS.md §Dry-run). Shows:
 Alg. 3 scheduling of non-IID token streams onto mediators, then one-XLA-
-program synchronization rounds with weighted delta all-reduce (Eq. 6).
+program synchronization rounds with weighted delta all-reduce (Eq. 6) --
+the round delegates its shard_map + psum Eq. 6 to the engine's shared
+helpers (core/engine.py), so this IS the same round implementation the
+CNN simulator runs.
 
   PYTHONPATH=src python examples/federated_llm.py --arch hymba-1.5b
+
+``--model-parallel t`` builds the (data, model) mesh with a t-way model
+axis so each mediator slice tensor-shards its replica (needs a device
+count divisible by t; on CPU force host devices first, e.g.
+XLA_FLAGS=--xla_force_host_platform_device_count=2 --model-parallel 2).
 """
 import argparse
 
@@ -16,10 +24,12 @@ from repro.launch import fl_train
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args()
     import sys
     sys.argv = ["fl_train", "--arch", args.arch, "--rounds", "3",
-                "--clients", "8", "--gamma", "4", "--seq", "128"]
+                "--clients", "8", "--gamma", "4", "--seq", "128",
+                "--model-parallel", str(args.model_parallel)]
     fl_train.main()
 
 

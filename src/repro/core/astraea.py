@@ -56,6 +56,10 @@ class AstraeaTrainer:
     mediator_epochs: int = 1                # E_m
     alpha: float | None = 0.67              # augmentation factor; None = NoAug
     aug_mode: str | None = "online"         # "online" | "materialized" | None
+    # per-round adaptive rebalancing: recompute the Alg. 2 plan from the
+    # selected cohort's label histograms at every reschedule (online mode
+    # only; the refreshed plan is re-broadcast and metered per reschedule)
+    adaptive_plan: bool = False
     use_kernel_agg: bool = False
     reschedule_every_round: bool = False    # static client data -> schedule once
     store: str = "replicated"               # client-store placement policy
@@ -66,6 +70,11 @@ class AstraeaTrainer:
     # synchronous barrier engine
     async_spec: object = None
     mesh: object = None                     # mediator mesh; None = all devices
+    # model-axis size of the 2-D (mediator, model) mesh: each mediator
+    # slice tensor-shards its parameter residency over this many devices
+    # (launch/mesh.py:make_fl_mesh). None = 1-D mediator mesh (or the
+    # ASTRAEA_MODEL_PARALLEL env default). Ignored when ``mesh`` is given.
+    model_parallel: int | None = None
     seed: int = 0
     history: list[dict] = field(default_factory=list)
 
@@ -77,7 +86,10 @@ class AstraeaTrainer:
         self.augmentation_plan = phase.plan
         self.extra_storage_frac = phase.extra_storage_frac  # realized
         self.planned_extra_frac = phase.planned_extra_frac  # avoided (online)
-        engine_plan = phase.engine_plan
+        engine_plan, adaptive_alpha = augmentation.resolve_engine_plan(
+            phase, self.adaptive_plan, self.alpha)
+        from repro.launch.mesh import resolve_fl_mesh
+        mesh = resolve_fl_mesh(self.mesh, self.model_parallel)
 
         # donate_params=False: the historical trainer API let callers keep
         # references to trainer.params across rounds; donation (the engine
@@ -93,7 +105,8 @@ class AstraeaTrainer:
                 reschedule_every_round=self.reschedule_every_round,
                 store=self.store, pad_mediators_to=pad_m,
                 donate_params=False, seed=self.seed),
-            mesh=self.mesh, aug_plan=engine_plan)
+            mesh=mesh, aug_plan=engine_plan,
+            adaptive_aug_alpha=adaptive_alpha)
         if phase.mode == "materialized":
             # online mode charges this inside the engine; the materialized
             # phase broadcast the same plan before the engine existed

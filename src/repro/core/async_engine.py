@@ -130,12 +130,18 @@ class AsyncRoundEngine:
         # bitwise-identical to the aggregation tail inside the engine's
         # round executable, while eager op-by-op dispatch rounds
         # differently on some inputs (jit caches one executable per
-        # distinct commit size -- S=0 always commits the full padded M)
+        # distinct commit size -- S=0 always commits the full padded M).
+        # On a 2-D (mediator, model) mesh the commit mirrors the engine's
+        # §8 cycle: gather the model-sharded params, fold the replicated
+        # wave stack, reshard on the way out -- exact-byte moves, so the
+        # 2-D async trajectory stays bitwise too.
         def _commit(params, stacked, weights):
             agg = self.engine._aggregate(stacked, weights)
             if self._parallel_clients:
-                return agg
-            return jax.tree.map(lambda p, d: p + d, params, agg)
+                return self.engine.shard_params(agg)
+            params = self.engine.replicate_params(params)
+            return self.engine.shard_params(
+                jax.tree.map(lambda p, d: p + d, params, agg))
 
         self._commit_fn = jax.jit(_commit)
         self._straggler: StragglerModel | None = None
@@ -203,7 +209,8 @@ class AsyncRoundEngine:
             mask[row_of[rows]] = 1.0
             wslot = slot * jnp.asarray(mask)    # members bitwise, rest 0
             stacked, weights = eng.wave_fn(snapshot, data_args, plan_args,
-                                           unperm, wslot, keys)
+                                           unperm, wslot, keys,
+                                           *eng.aug_args())
             rj = jnp.asarray(rows)
             vals = jax.tree.map(lambda a: a[rj], stacked)
             wts = weights[rj]
@@ -220,6 +227,13 @@ class AsyncRoundEngine:
             else:
                 eng.comm.astraea_wave(clients, len(rows),
                                       eng.cfg.mediator_epochs)
+            if eng._model_size > 1:
+                # every wave execution gathers the model-sharded snapshot
+                # (wave_fn's replicate_params) -- one intra-pod charge per
+                # wave, unlike the WAN ledger where waves only re-partition
+                # a round's fixed byte total
+                eng.comm.model_axis_round(eng._msize * eng._model_size,
+                                          eng._model_size)
             self._pending.append(_PendingWave(
                 r, wi, t0 + wstats["wave_times"][wi], rows, vals, wts))
         eng.comm.end_round()
@@ -258,6 +272,11 @@ class AsyncRoundEngine:
         stack = jax.tree.map(lambda *xs: jnp.concatenate(xs),
                              *(parts_v + [dvals]))
         wvec = jnp.concatenate(parts_w + [dwts])
+        if self.engine._model_size > 1:
+            # the jitted commit gathers the model-sharded params too
+            self.engine.comm.model_axis_round(
+                self.engine._msize * self.engine._model_size,
+                self.engine._model_size)
         self.engine.params = self._commit_fn(self.engine.params, stack, wvec)
         self.num_commits += 1
         self.commit_log.append({

@@ -324,6 +324,27 @@ def resolve_aug_mode(data, alpha: float | None, aug_mode: str | None,
     return AugPhase(data, plan, engine_plan, 0.0, planned_frac, mode)
 
 
+def resolve_engine_plan(phase: AugPhase, adaptive_plan: bool,
+                        alpha: float | None
+                        ) -> tuple[np.ndarray | None, float | None]:
+    """Shared trainer-side adaptive-plan resolution (both trainers route
+    through here, like ``resolve_aug_mode``, so the semantics can never
+    drift): returns ``(engine_plan, adaptive_aug_alpha)`` for the engine.
+
+    Adaptive mode requires the online pipeline and installs the in-round
+    hook even when the *initial* plan is all-zero -- a later cohort may
+    drift into needing one -- whereas the static path keeps the zero-plan
+    fast path (no hook, exact no-aug executable).
+    """
+    if not adaptive_plan:
+        return phase.engine_plan, None
+    if phase.mode != "online":
+        raise ValueError("adaptive_plan requires aug_mode='online' with "
+                         "alpha set (the plan must live inside the round "
+                         "program to be refreshed)")
+    return phase.plan, alpha
+
+
 def rebalance_federation(key: Array, client_images: list[np.ndarray],
                          client_labels: list[np.ndarray], num_classes: int,
                          alpha: float, **kw):

@@ -41,6 +41,16 @@ cross-shard fetch count is surfaced in ``last_placement_stats``). The
 serve capacity is the static worst case ``min(M_pad * gamma, K_local)``,
 so reschedules at fixed M never change shapes and never re-jit.
 
+2-D mesh note: on a ``(mediator, model)`` mesh every placement policy
+partitions the *client* axis over the mediator submesh rows only -- the
+specs never mention ``model``, so each mediator row's client slice is
+replicated across its model columns and the schedule-time remapping
+(ownership = mediator shard) is untouched by tensor parallelism.  The
+engine reports its model-axis parameter residency through
+``note_param_residency`` so ``stats()`` audits both halves of device
+memory: client bytes (partitioned by *policy* over ``mediator``) and param
+bytes (partitioned by the *rule tables* over ``model``).
+
 Augmentation note: stores always hold the federation **as packed** -- they
 never see augmented copies.  Under the online rebalancing pipeline the
 engine augments inside the round program, so per-device residency stays at
@@ -88,6 +98,16 @@ class ClientStore:
 
     policy: str
     permutes_rows = False
+    # (per_device_param_bytes, model_axis) reported by the engine after it
+    # places the model parameters (sharded over the ``model`` mesh axis on
+    # a 2-D mesh); None until an engine adopts the store
+    param_residency: tuple[int, int] | None = None
+
+    def note_param_residency(self, per_device_bytes: int,
+                             model_axis: int = 1) -> None:
+        """Record the engine's per-device parameter residency so
+        ``stats()`` covers the whole device-memory picture."""
+        self.param_residency = (int(per_device_bytes), int(model_axis))
 
     def place(self, groups: list[list[int]], m_pad: int) -> np.ndarray:
         row_to_group = np.full(m_pad, -1, np.int64)
@@ -104,10 +124,17 @@ class ClientStore:
         raise NotImplementedError
 
     def stats(self) -> dict:
-        """Residency audit row: policy + per-device bytes (benchmarks and
-        the online-aug byte tests compare this against the raw pack)."""
-        return {"policy": self.policy,
-                "per_device_bytes": self.per_device_bytes()}
+        """Residency audit row: policy + per-device client bytes
+        (benchmarks and the online-aug byte tests compare this against the
+        raw pack), plus the engine's per-device *param* bytes and model
+        axis once an engine has adopted the store (the 2-D mesh tests
+        assert the model-axis reduction here)."""
+        row = {"policy": self.policy,
+               "per_device_bytes": self.per_device_bytes()}
+        if self.param_residency is not None:
+            row["per_device_param_bytes"], row["model_axis"] = \
+                self.param_residency
+        return row
 
 
 class ReplicatedStore(ClientStore):

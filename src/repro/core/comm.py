@@ -28,7 +28,18 @@ Table III claim is a ratio of these ledgers).
 
 Alg. 2's one-off server->client plan broadcast (``plan_broadcast``) is
 charged at initialization whenever augmentation is enabled -- a few hundred
-bytes against megabyte model legs, but the ledger stays complete.
+bytes against megabyte model legs, but the ledger stays complete.  With
+per-round adaptive plans the engine re-broadcasts the refreshed plan to
+each reschedule's cohort, one ``plan_broadcast`` charge per reschedule.
+
+**Two ledgers, never mixed.** ``total_bytes`` is the WAN ledger: traffic
+that crosses the client<->server boundary, the quantity the paper's 82%
+claim is a ratio of.  ``intra_pod_bytes`` is the datacenter ledger: the
+tensor-parallel collectives of the 2-D ``(mediator, model)`` mesh (the
+per-round model-axis param gather, ``model_axis_round``).  Model
+parallelism is a server-side deployment detail -- it moves bytes over the
+pod interconnect, not the WAN -- so it must never inflate ``total_bytes``
+(asserted in tests/test_comm.py).
 """
 from __future__ import annotations
 
@@ -40,7 +51,8 @@ import math
 class CommMeter:
     num_params: int
     bytes_per_param: int = 4
-    total_bytes: float = 0.0
+    total_bytes: float = 0.0            # WAN ledger (client <-> server)
+    intra_pod_bytes: float = 0.0        # datacenter ledger (model-axis TP)
     # cumulative total_bytes after each synchronization round (one entry
     # per round, appended by the engine via end_round)
     round_log: list = field(default_factory=list)
@@ -52,6 +64,23 @@ class CommMeter:
     @property
     def megabytes(self) -> float:
         return self.total_bytes / 2 ** 20
+
+    @property
+    def intra_pod_megabytes(self) -> float:
+        return self.intra_pod_bytes / 2 ** 20
+
+    # ---- intra-pod accounting (2-D mediator x model mesh) ----
+    def model_axis_round(self, num_devices: int, model_size: int) -> None:
+        """One round's tensor-parallel collectives on the pod interconnect:
+        every device all-gathers the ``(model_size - 1) / model_size`` of
+        the parameters it does not hold (the §8 gather; the reshard on the
+        way out is a local slice, zero traffic).  Charged on the intra-pod
+        ledger ONLY -- the WAN ledger behind the paper's traffic claims
+        must be invariant to the server's model-parallel layout."""
+        if model_size <= 1:
+            return
+        self.intra_pod_bytes += (num_devices * self.model_bytes
+                                 * (model_size - 1) / model_size)
 
     # ---- one-off accounting ----
     def plan_broadcast(self, num_entries: int, num_clients: int,

@@ -57,7 +57,7 @@ What makes it an engine rather than a trainer loop:
    stays 1 for an async engine too.
 7. **Online rebalancing.** When the engine is built with an ``aug_plan``
    (the server's tiny ``(num_classes,)`` Alg. 2 array, broadcast once and
-   fed into the shard_map as a replicated operand), each mediator row's
+   fed into the jitted round as a true operand), each mediator row's
    per-slot data is passed through ``augmentation.online_augment_batch``
    INSIDE the row program before training: a fixed-shape class-conditional
    resample+warp redrawn every round from round-indexed keys.  The store
@@ -68,7 +68,59 @@ What makes it an engine rather than a trainer loop:
    ``sum(mask * (1 + plan[y]))``.  Since the hook lives inside the jitted
    round, augmentation adds zero traces: ``num_round_traces`` stays 1,
    including across async waves (aug keys derive from the per-row round
-   keys, never from wave membership).
+   keys, never from wave membership).  With ``adaptive_aug_alpha`` set,
+   the plan is *recomputed from the selected cohort's label histograms at
+   every reschedule* (the class-imbalance-FL "rebalance per round"
+   regime): the plan is a round operand, so only its value changes -- the
+   one compiled executable is reused -- and each re-broadcast is metered
+   on the WAN ledger via ``CommMeter.plan_broadcast``.
+8. **2-D mediator x model mesh.** On a ``make_fl_mesh(mediator=n,
+   model=t)`` mesh the round shard_map is manual over *both* axes: the
+   ``model`` axis carries no variation inside the round body (every model
+   column runs the identical full-parameter row program -- see below), so
+   making it manual costs nothing and sidesteps the XLA-CPU partitioner
+   crash that ``lax.scan`` under a partial-auto shard_map trips (the same
+   bug family as the remat note in ``launch/dryrun.py``; the transformer
+   round keeps ``model`` compiler-auto for true tensor-parallel compute
+   and only ever executes that way on TPU meshes).  The sharding
+   contract:
+
+   * **params** are sharded along ``model`` by the logical-axis rule
+     tables (``param_shardings(model.param_specs(), mesh,
+     model_only_rules())``) and replicated along ``mediator`` -- FL
+     replicas diverge during a round, so weights never shard over the
+     mediator axis.  At rest (between rounds, and in the optimizer-free
+     server state) every device holds ``1/t`` of the model: per-device
+     param bytes shrink by the model-axis factor (surfaced through
+     ``ClientStore.stats()``).
+   * **client batches / schedules / keys** are partitioned on
+     ``mediator`` and replicated on ``model`` (``P("mediator")`` never
+     mentions ``model``); the sharded store's client axis partitions
+     over the mediator submesh rows only.
+   * **inside the round** the params are gathered to model-replicated
+     (``with_sharding_constraint`` -- one all-gather per round), each
+     mediator row then runs the *identical full-parameter row program*
+     on every model column, and the updated params are resharded back
+     onto the model axis on the way out.  Gather and reshard move exact
+     bytes and the row program never sees a sharded contraction, so the
+     2-D trajectory is bitwise identical to the 1-D one -- ``model=1``
+     reproduces today's 1-D trajectories exactly, and with
+     ``row_exec="map"`` a ``2x2`` mesh matches a ``4x1`` mesh bit for
+     bit across all three stores, sync and async (asserted in
+     tests/test_model_mesh.py).  This is residency (ZeRO-style) model
+     sharding: compute is replicated along ``model`` while HBM is not --
+     the right trade at CNN scale; true tensor-parallel *compute* rides
+     the same mesh through ``launch/steps.py:make_fl_round``, which
+     delegates its shard_map and Eq. 6 to this module
+     (``mediator_shard_map`` / ``psum_eq6``) so there is one federated
+     round implementation.
+   * **Eq. 6** reduces over the mediator axis only: the stacked mediator
+     outputs are constrained to replicated (an all-gather across
+     ``mediator``; the ``model`` columns already agree) and the weighted
+     average runs in single-device order.  Model-axis collectives are
+     accounted on the separate intra-pod ledger
+     (``CommMeter.model_axis_round``), never on the WAN ledger that
+     backs the paper's 82% traffic claim.
 
 Bit-identity guarantees: every store feeds identical per-slot values into
 identical per-row programs (gathers move exact bits), the sharded store's
@@ -104,7 +156,9 @@ from repro.core.fl import (LocalSpec, evaluate, make_client_update,
 from repro.core.mediator import make_mediator_update
 from repro.data.federated import FederatedDataset
 from repro.launch.compat import shard_map
-from repro.launch.mesh import make_mediator_mesh, replicated_sharding
+from repro.launch.mesh import (default_fl_mesh, model_axis_size,
+                               replicated_sharding)
+from repro.launch.sharding import model_only_rules, param_shardings
 from repro.models.cnn import Model, count_params
 from repro.optim.optimizers import Optimizer
 
@@ -113,6 +167,82 @@ PyTree = Any
 
 def _pad_multiple(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
+
+
+# --------------------------------------------------------------------------
+# The shared federated-round building blocks (the ONE round implementation:
+# FLRoundEngine composes them below; launch/steps.py:make_fl_round delegates
+# its transformer round to the same helpers)
+# --------------------------------------------------------------------------
+
+def mediator_shard_map(body, mesh, in_specs, out_specs, *,
+                       mediator_axes: tuple = ("mediator",),
+                       manual_axes: tuple | None = None,
+                       check: bool | None = None):
+    """shard_map a per-mediator ``body`` over the mediator axes of ``mesh``.
+
+    ``manual_axes`` defaults to ``mediator_axes``: every other mesh axis
+    (the tensor-parallel ``model`` axis) then stays compiler-auto, so
+    per-mediator model sharding rides along pjit-style -- the transformer
+    round's configuration (``launch/steps.py:make_fl_round``).  The FL
+    engine instead passes every mesh axis as manual (its model columns
+    run identical programs, and XLA-CPU's partitioner crashes on
+    ``lax.scan`` under partial-auto -- see the engine docstring §8).
+    ``check=None`` keeps the replication checker on for fully-manual
+    meshes and disables it under partial-auto, where it cannot reason
+    about the auto axes.
+    """
+    manual = tuple(manual_axes if manual_axes is not None else mediator_axes)
+    auto = tuple(a for a in mesh.axis_names if a not in manual)
+    if check is None:
+        check = not auto
+    return shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
+                     manual_axes=manual, check=check)
+
+
+def eq6_aggregate(stacked: PyTree, weights, mesh, *,
+                  use_kernel_agg: bool = False) -> PyTree:
+    """Eq. 6 over stacked ``(M, ...)`` mediator outputs, in a fixed order.
+
+    Constrains the stack to replicated first (the only cross-device
+    collective is an all-gather over ``mediator``; the ``model`` columns
+    already hold identical rows), so the weighted-average reduction always
+    runs in single-device order -- the bit-stability anchor of the whole
+    engine.  ``use_kernel_agg`` routes through the fused ``fedavg_agg``
+    Pallas kernel instead of the pure-jnp path (same math).
+    """
+    rep = replicated_sharding(mesh)
+    stacked = jax.lax.with_sharding_constraint(stacked, rep)
+    weights = jax.lax.with_sharding_constraint(weights, rep)
+    if use_kernel_agg:
+        from repro.kernels import ops as kops
+        return kops.fedavg_agg_tree(stacked, weights)
+    return weighted_average(stacked, weights)
+
+
+def psum_eq6(delta: PyTree, n_m, mediator_axes: tuple) -> PyTree:
+    """Eq. 6 *inside* the manual region: weighted psum over the mediator
+    axes.  The production-memory-profile variant -- no ``(M, ...)`` stack
+    is ever materialized -- used by the transformer round
+    (``launch/steps.py:make_fl_round``) on the big meshes, where the
+    replicated stack of ``eq6_aggregate`` would not fit."""
+    num = jax.tree.map(lambda d: jax.lax.psum(d * n_m, mediator_axes), delta)
+    den = jax.lax.psum(n_m, mediator_axes)
+    return jax.tree.map(lambda d: d / den, num)
+
+
+def _per_device_param_bytes(params: PyTree) -> int:
+    """Bytes of parameter residency on one device (the first addressable
+    one): full leaf bytes when replicated, ``1/model`` when sharded."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        shards = getattr(leaf, "addressable_shards", None)
+        if not shards:
+            total += leaf.nbytes
+            continue
+        dev = shards[0].device
+        total += sum(s.data.nbytes for s in shards if s.device == dev)
+    return int(total)
 
 
 @dataclass(frozen=True)
@@ -185,10 +315,17 @@ class FLRoundEngine:
     def __init__(self, model: Model, opt: Optimizer, data: FederatedDataset,
                  cfg: EngineConfig, *, mesh=None,
                  loss_fn: Callable | None = None,
-                 aug_plan: np.ndarray | None = None):
+                 aug_plan: np.ndarray | None = None,
+                 adaptive_aug_alpha: float | None = None):
         self.model, self.opt, self.data, self.cfg = model, opt, data, cfg
-        self.mesh = mesh if mesh is not None else make_mediator_mesh()
+        self.mesh = mesh if mesh is not None else default_fl_mesh()
         self._msize = int(self.mesh.shape["mediator"])
+        self._model_size = model_axis_size(self.mesh)
+        if adaptive_aug_alpha is not None and aug_plan is None:
+            raise ValueError("adaptive_aug_alpha requires an initial aug_plan "
+                             "(the in-round hook must be installed at trace "
+                             "time)")
+        self._adaptive_alpha = adaptive_aug_alpha
 
         sizes = [x.shape[0] for x in data.client_images]
         pad = _pad_multiple(max(sizes), cfg.local.batch_size)
@@ -200,34 +337,45 @@ class FLRoundEngine:
         self.store = build_client_store(
             cfg.store, xs, ys, mask, self.mesh,
             capacity=min(cfg.clients_per_round, data.num_clients))
-        self._counts = data.client_counts()
+        self._raw_counts = data.client_counts()
+        self._counts = self._raw_counts
         self._rng = np.random.default_rng(cfg.seed)
 
-        # commit params to the replicated mesh sharding up front: round
-        # outputs carry it, so an uncommitted init would cache-miss the
-        # round executable once (a full recompile) on the second round
+        # ---- params: model-axis sharded at rest, replicated otherwise ----
+        # On a 2-D mesh each device holds 1/model of every rule-table-
+        # sharded leaf (§8); on the 1-D mesh (or without param specs) the
+        # params are committed replicated up front -- round outputs carry
+        # the same sharding either way, so the second round never
+        # cache-misses the executable.
         replicated = replicated_sharding(self.mesh)
+        self._param_shardings = None
+        if self._model_size > 1 and model.param_specs is not None:
+            self._param_shardings = param_shardings(
+                model.param_specs(), self.mesh, model_only_rules())
+        placement = self._param_shardings if self._param_shardings is not None \
+            else replicated
         self.params = jax.device_put(model.init(jax.random.PRNGKey(cfg.seed)),
-                                     replicated)
+                                     placement)
+        # report the model axis the params are ACTUALLY sharded over: a
+        # spec-less model stays fully replicated even on a 2-D mesh
+        self.store.note_param_residency(
+            _per_device_param_bytes(self.params),
+            self._model_size if self._param_shardings is not None else 1)
         self.comm = CommMeter(count_params(self.params))
 
         # ---- online-rebalancing plan (Alg. 2, device-resident mode) ----
+        self._aug_plan = None
+        self.last_plan: np.ndarray | None = None
         if aug_plan is not None:
             plan_np = np.asarray(aug_plan)
             if plan_np.shape != (data.num_classes,):
                 raise ValueError(
                     f"aug_plan shape {plan_np.shape} != ({data.num_classes},)")
-            self._aug_plan = jax.device_put(
-                jnp.asarray(plan_np, jnp.int32), replicated)
-            # Alg. 3 packs mediators by the histograms clients WILL train
-            # on: the expected post-augmentation counts (the materialized
-            # mode sees the same thing through its inflated client data)
-            self._counts = self._counts * (1.0 + plan_np.astype(np.float64))
+            self._install_plan(plan_np)
             # the plan broadcast is WAN traffic: (num_classes,) int32 down
-            # to every client, once at initialization
+            # to every client, once at initialization (adaptive refreshes
+            # re-broadcast to each round's cohort in _pack_schedule)
             self.comm.plan_broadcast(plan_np.size, data.num_clients)
-        else:
-            self._aug_plan = None
         self.history: list[dict] = []
         self.last_schedule_stats: dict | None = None
         self.num_schedule_packs = 0             # host packing events (bench)
@@ -239,6 +387,42 @@ class FLRoundEngine:
     # ------------------------------------------------------------------
     # round program
     # ------------------------------------------------------------------
+    def _install_plan(self, plan_np: np.ndarray) -> None:
+        """(Re)place the Alg. 2 plan operand and rescale the Alg. 3 counts.
+
+        The plan is a true argument of the jitted round (same shape/dtype/
+        sharding every time), so swapping its *value* -- the adaptive
+        per-reschedule path -- reuses the one compiled executable."""
+        plan_np = np.asarray(plan_np)
+        self.last_plan = plan_np
+        self._aug_plan = jax.device_put(jnp.asarray(plan_np, jnp.int32),
+                                        replicated_sharding(self.mesh))
+        # Alg. 3 packs mediators by the histograms clients WILL train on:
+        # the expected post-augmentation counts (the materialized mode sees
+        # the same thing through its inflated client data)
+        self._counts = self._raw_counts * (1.0 + plan_np.astype(np.float64))
+
+    def aug_args(self) -> tuple:
+        """The round executable's trailing Alg. 2 operand (empty if the
+        engine holds no plan). Callers of ``wave_fn`` append this."""
+        return (self._aug_plan,) if self._aug_plan is not None else ()
+
+    def replicate_params(self, params: PyTree) -> PyTree:
+        """Gather model-axis-sharded params to model-replicated (inside a
+        jitted program). Identity on a 1-D mesh -- the gather/reshard pair
+        moves exact bytes, which is what keeps 2-D trajectories bitwise."""
+        if self._param_shardings is None:
+            return params
+        return jax.lax.with_sharding_constraint(
+            params, replicated_sharding(self.mesh))
+
+    def shard_params(self, params: PyTree) -> PyTree:
+        """Reshard params back onto the model axis (inverse of
+        ``replicate_params``; identity on a 1-D mesh)."""
+        if self._param_shardings is None:
+            return params
+        return jax.lax.with_sharding_constraint(params, self._param_shardings)
+
     def _build_round_fn(self, loss_fn):
         cfg, store = self.cfg, self.store
         parallel_clients = cfg.aggregate == "weights"
@@ -251,9 +435,7 @@ class FLRoundEngine:
                                                    cfg.mediator_epochs,
                                                    loss_fn=loss_fn)
         P_med = P("mediator")
-        replicated = replicated_sharding(self.mesh)
         use_aug = self._aug_plan is not None
-        aug_plan_dev = self._aug_plan
 
         def _rows(fn, params, *batched):
             if cfg.row_exec == "map":
@@ -310,34 +492,40 @@ class FLRoundEngine:
             return outs, weights
 
         aug_specs = (P(),) if use_aug else ()
-        train = shard_map(_train, self.mesh,
-                          in_specs=(P(), store.data_specs, store.plan_specs,
-                                    P_med, P_med) + aug_specs,
-                          out_specs=(P_med, P_med), manual_axes=("mediator",))
+        train = mediator_shard_map(
+            _train, self.mesh,
+            in_specs=(P(), store.data_specs, store.plan_specs,
+                      P_med, P_med) + aug_specs,
+            out_specs=(P_med, P_med),
+            # every mesh axis manual: the model columns run identical
+            # replicated-compute programs (§8), and partial-auto would
+            # trip the XLA-CPU scan crash
+            manual_axes=tuple(self.mesh.axis_names))
 
-        def trained_rows(params, data, plan, unperm, slot, keys):
-            aug_args = (aug_plan_dev,) if use_aug else ()
-            stacked, weights = train(params, data, plan, slot, keys,
-                                     *aug_args)
+        def trained_rows(params, data, plan, unperm, slot, keys, *aug):
+            stacked, weights = train(params, data, plan, slot, keys, *aug)
             if store.permutes_rows:             # undo locality placement
                 stacked = jax.tree.map(lambda a: a[unperm], stacked)
                 weights = weights[unperm]
             # replicate the (M, ...) stack before Eq. 6 so the reduction
             # order (and hence the result, bitwise) is mesh-independent
-            stacked = jax.lax.with_sharding_constraint(stacked, replicated)
-            weights = jax.lax.with_sharding_constraint(weights, replicated)
+            rep = replicated_sharding(self.mesh)
+            stacked = jax.lax.with_sharding_constraint(stacked, rep)
+            weights = jax.lax.with_sharding_constraint(weights, rep)
             return stacked, weights
 
-        def round_fn(params, data, plan, unperm, slot, keys):
+        def round_fn(params, data, plan, unperm, slot, keys, *aug):
             self.num_round_traces += 1          # python: counts (re)traces
+            params = self.replicate_params(params)      # §8: model gather
             stacked, weights = trained_rows(params, data, plan, unperm, slot,
-                                            keys)
+                                            keys, *aug)
             agg = self._aggregate(stacked, weights)
             if parallel_clients:
-                return agg
-            return jax.tree.map(lambda p, d: p + d, params, agg)
+                return self.shard_params(agg)
+            return self.shard_params(
+                jax.tree.map(lambda p, d: p + d, params, agg))
 
-        def wave_fn(params, data, plan, unperm, slot, keys):
+        def wave_fn(params, data, plan, unperm, slot, keys, *aug):
             # the wave-partitioned entry point (core/async_engine.py): the
             # SAME full padded-M program, stopping before aggregation. The
             # caller zeroes the slot rows of mediators outside the wave
@@ -345,7 +533,8 @@ class FLRoundEngine:
             # every wave of every reschedule. No donation: the dispatch
             # snapshot params are shared by all waves of a round.
             self.num_round_traces += 1          # python: counts (re)traces
-            return trained_rows(params, data, plan, unperm, slot, keys)
+            params = self.replicate_params(params)      # §8: model gather
+            return trained_rows(params, data, plan, unperm, slot, keys, *aug)
 
         self.wave_fn = jax.jit(wave_fn)
         donate = (0,) if cfg.donate_params else ()
@@ -353,10 +542,8 @@ class FLRoundEngine:
 
     def _aggregate(self, stacked: PyTree, weights: jax.Array) -> PyTree:
         """Eq. 6 over the stacked (M, ...) mediator results."""
-        if self.cfg.use_kernel_agg:
-            from repro.kernels import ops as kops
-            return kops.fedavg_agg_tree(stacked, weights)
-        return weighted_average(stacked, weights)
+        return eq6_aggregate(stacked, weights, self.mesh,
+                             use_kernel_agg=self.cfg.use_kernel_agg)
 
     # ------------------------------------------------------------------
     # scheduling (host side: tiny integer work, no sample movement)
@@ -388,6 +575,17 @@ class FLRoundEngine:
         mediators first, dummies last), which is what keeps every
         placement bit-identical to the replicated path.
         """
+        if self._adaptive_alpha is not None:
+            # per-round adaptive rebalancing: recompute the Alg. 2 plan
+            # from the *selected cohort's* label histograms (the drifted
+            # view of the federation this round trains on), re-broadcast
+            # the tiny array to the cohort, and let Alg. 3 below pack by
+            # the refreshed expected post-augmentation counts. The plan is
+            # a round operand, so no re-trace happens (asserted in tests).
+            plan_np = augmentation.augmentation_plan(
+                self._raw_counts[sel].sum(axis=0), self._adaptive_alpha)
+            self._install_plan(plan_np)
+            self.comm.plan_broadcast(plan_np.size, len(sel))
         groups = self._groups_for(sel)
         m_real = len(groups)
         m_pad = self.cfg.pad_mediators_to or m_real
@@ -447,11 +645,16 @@ class FLRoundEngine:
             self.ensure_schedule()
         keys = self._round_keys(row_to_group, m_real)
         self.params = self._round_fn(self.params, data_args, plan_args,
-                                     unperm, slot, keys)
+                                     unperm, slot, keys, *self.aug_args())
         if cfg.aggregate == "weights":
             self.comm.fedavg_round(c)
         else:
             self.comm.astraea_round(c, cfg.gamma, cfg.mediator_epochs)
+        if self._model_size > 1:
+            # intra-pod ledger only: the per-round model-axis param gather
+            # must never pollute the WAN bytes behind the 82% claim
+            self.comm.model_axis_round(self._msize * self._model_size,
+                                       self._model_size)
         self.comm.end_round()
         self._round += 1
 

@@ -34,6 +34,10 @@ class FedAvgTrainer:
     local: LocalSpec                 # B, E
     alpha: float | None = None       # Alg. 2 factor; None = plain FedAvg
     aug_mode: str | None = "online"  # "online" | "materialized" | None
+    # recompute the plan from each round's cohort histograms (see
+    # AstraeaTrainer.adaptive_plan; FedAvg reschedules every round, so the
+    # plan drifts with the per-round client sample)
+    adaptive_plan: bool = False
     store: str = "replicated"        # client-store placement policy
     # padded mediator count; defaults to c (gamma=1) so the per-round
     # random reschedule never re-jits the round executable
@@ -42,6 +46,9 @@ class FedAvgTrainer:
     # synchronous barrier engine
     async_spec: object = None
     mesh: object = None              # mediator mesh; None = all devices
+    # model-axis size of the 2-D (mediator, model) mesh (see
+    # AstraeaTrainer.model_parallel). Ignored when ``mesh`` is given.
+    model_parallel: int | None = None
     seed: int = 0
     loss_fn: object = None           # optional custom local loss
     history: list[dict] = field(default_factory=list)
@@ -54,6 +61,10 @@ class FedAvgTrainer:
         self.augmentation_plan = phase.plan
         self.extra_storage_frac = phase.extra_storage_frac
         self.planned_extra_frac = phase.planned_extra_frac
+        engine_plan, adaptive_alpha = augmentation.resolve_engine_plan(
+            phase, self.adaptive_plan, self.alpha)
+        from repro.launch.mesh import resolve_fl_mesh
+        mesh = resolve_fl_mesh(self.mesh, self.model_parallel)
         # donate_params=False: see AstraeaTrainer -- historical callers may
         # hold references to trainer.params across rounds
         pad_m = self.pad_mediators_to or \
@@ -64,8 +75,8 @@ class FedAvgTrainer:
                                 local=self.local, store=self.store,
                                 pad_mediators_to=pad_m, donate_params=False,
                                 seed=self.seed),
-            mesh=self.mesh, loss_fn=self.loss_fn,
-            aug_plan=phase.engine_plan)
+            mesh=mesh, loss_fn=self.loss_fn,
+            aug_plan=engine_plan, adaptive_aug_alpha=adaptive_alpha)
         if phase.mode == "materialized":
             self.engine.comm.plan_broadcast(self.data.num_classes,
                                             self.data.num_clients)

@@ -63,8 +63,7 @@ def build_fl_lowerable(cfg, shape, mesh):
     specs = T.param_specs(cfg, max_seq=shape.seq_len)
     p_structs = L.shape_dtype(specs)
     # model-sharded only: strip data axes from the train rules
-    rules = {k: [a for a in v if a == "model"] for k, v in S.TRAIN_RULES.items()}
-    p_shards = S.param_shardings(specs, mesh, rules)
+    p_shards = S.param_shardings(specs, mesh, S.model_only_rules())
     spec_tree = jax.tree.map(lambda ns: ns.spec, p_shards)
     B, Ssz = shape.global_batch, shape.seq_len
     i32 = jnp.int32

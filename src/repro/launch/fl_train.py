@@ -53,10 +53,22 @@ def main():
     ap.add_argument("--gamma", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=5e-4)
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="model-axis size of the (data, model) mesh: each "
+                         "mediator slice tensor-shards its replica over "
+                         "this many devices (device count must divide)")
     args = ap.parse_args()
 
     cfg = C.reduced(C.get(args.arch))
-    mesh = make_host_mesh()
+    if args.model_parallel > 1:
+        nd = len(jax.devices())
+        if nd % args.model_parallel:
+            raise SystemExit(f"{nd} devices not divisible by "
+                             f"--model-parallel {args.model_parallel}")
+        mesh = jax.make_mesh((nd // args.model_parallel, args.model_parallel),
+                             ("data", "model"))
+    else:
+        mesh = make_host_mesh()
     n_mediators = int(np.prod([mesh.shape[a] for a in mesh.axis_names
                                if a in ("pod", "data")]))
 

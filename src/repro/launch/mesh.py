@@ -9,6 +9,8 @@ Production target: TPU v5e pods.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
 
@@ -35,6 +37,62 @@ def make_mediator_mesh(num_devices: int | None = None):
     return jax.make_mesh((n,), ("mediator",))
 
 
+def make_fl_mesh(*, mediator: int | None = None, model: int = 1):
+    """2-D ``(mediator, model)`` mesh for the FL round engine.
+
+    The ``mediator`` axis carries the embarrassingly-parallel mediator
+    fleet (as in :func:`make_mediator_mesh`); the ``model`` axis
+    tensor-shards each mediator row's parameter residency via the
+    logical-axis rule tables (``launch/sharding.py``).  ``model=1`` keeps
+    a degenerate size-1 model axis -- materially identical to the 1-D
+    mediator mesh (every row replicates its full model).
+
+    ``mediator=None`` spreads the remaining devices over the mediator
+    axis; the device count must then be divisible by ``model``.
+    """
+    model = int(model)
+    if model < 1:
+        raise ValueError(f"model axis size must be >= 1, got {model}")
+    if mediator is None:
+        n = len(jax.devices())
+        if n % model:
+            raise ValueError(f"{n} devices are not divisible by a "
+                             f"model axis of {model}")
+        mediator = n // model
+    return jax.make_mesh((int(mediator), model), ("mediator", "model"))
+
+
+def default_fl_mesh(model_parallel: int | None = None):
+    """The engine's default mesh: 1-D mediator unless model parallelism is
+    requested (argument, else the ``ASTRAEA_MODEL_PARALLEL`` env knob --
+    the CI 2x2 leg forces the whole FL suite onto the 2-D mesh with it).
+
+    ``model_parallel <= 1`` returns the plain 1-D ``mediator`` mesh, so
+    existing single-axis deployments keep byte-identical programs.
+    """
+    mp = model_parallel
+    if mp is None:
+        mp = int(os.environ.get("ASTRAEA_MODEL_PARALLEL", "1") or "1")
+    if mp <= 1:
+        return make_mediator_mesh()
+    return make_fl_mesh(model=mp)
+
+
+def resolve_fl_mesh(mesh, model_parallel: int | None):
+    """Trainer-side mesh resolution (shared by AstraeaTrainer and
+    FedAvgTrainer): an explicit mesh always wins; otherwise a
+    ``model_parallel`` knob builds the default FL mesh; otherwise ``None``
+    so the engine applies its own (env-driven) default."""
+    if mesh is not None or model_parallel is None:
+        return mesh
+    return default_fl_mesh(model_parallel)
+
+
+def model_axis_size(mesh) -> int:
+    """Size of the tensor-parallel ``model`` axis (1 on a 1-D mesh)."""
+    return int(dict(mesh.shape).get("model", 1))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Mesh axes that carry the batch: ("pod","data") or ("data",)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
@@ -53,7 +111,10 @@ def mediator_sharding(mesh):
     *client* axis of a ``sharded`` ClientStore: clients are partitioned into
     contiguous blocks of ``K_pad // n`` rows, so device ``d`` owns clients
     ``[d * K_local, (d + 1) * K_local)`` (the owner map the store's
-    schedule-time remapping relies on).
+    schedule-time remapping relies on). On a 2-D ``(mediator, model)`` mesh
+    the spec leaves the ``model`` axis unmentioned, so client data is
+    partitioned over the mediator submesh rows and replicated across each
+    row's model columns -- the client axis never shards over ``model``.
     """
     from jax.sharding import NamedSharding, PartitionSpec
     return NamedSharding(mesh, PartitionSpec("mediator"))

@@ -45,6 +45,18 @@ TRAIN_RULES: dict[str, list] = {
 INFER_RULES = dict(TRAIN_RULES)
 
 
+def model_only_rules(rules: dict[str, list] | None = None) -> dict[str, list]:
+    """Strip every candidate except ``"model"`` from a rule table.
+
+    Federated replicas diverge during a round, so parameters must never
+    shard over the mediator/data axes -- the FL round engine and the
+    dry-run's ``make_fl_round`` lowering both shard weights over the
+    tensor-parallel ``model`` axis only.
+    """
+    rules = rules or TRAIN_RULES
+    return {k: [a for a in v if a == "model"] for k, v in rules.items()}
+
+
 def spec_for(shape: tuple[int, ...], axes: tuple[str, ...], mesh: Mesh,
              rules: dict[str, list[str]]) -> P:
     """PartitionSpec for one parameter under the rule table."""

@@ -11,15 +11,12 @@ parallelism stays pjit-style inside).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.launch import compat
 from repro.models import transformer as T
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 
@@ -123,6 +120,13 @@ def make_fl_round(cfg: T.ArchConfig, mesh, param_spec_tree: PyTree,
                   mediator_epochs: int = 1):
     """Astraea synchronization round as a single XLA program.
 
+    A thin transformer adapter over the engine's shared round machinery
+    (``core.engine.mediator_shard_map`` / ``psum_eq6`` -- the one federated
+    round implementation): this function only supplies the per-mediator
+    row body (sequential SGD over the client stream).  The mediator axes
+    here are the ("pod","data") mesh axes; ``core.engine.FLRoundEngine``
+    runs the same helpers over the ``mediator`` axis of an FL mesh.
+
     Inputs (global view):
       params:  model-sharded ONLY (each mediator slice holds a full replica
                of its model-parallel shard -- mediators diverge during the
@@ -135,8 +139,13 @@ def make_fl_round(cfg: T.ArchConfig, mesh, param_spec_tree: PyTree,
 
     The round runs `mediator_epochs` x `local_steps` sequential SGD steps
     per mediator (asynchronous SGD inside the mediator), then aggregates
-    deltas with the FedAvg weights via psum over the mediator axes.
+    deltas with the FedAvg weights via ``psum_eq6`` over the mediator axes
+    (the production memory profile: no (M, ...) stack is materialized --
+    the engine's replicated-stack ``eq6_aggregate`` would not fit at pod
+    scale).
     """
+    from repro.core.engine import mediator_shard_map, psum_eq6
+
     daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
     # Manual axes are only the mediator ("pod","data") axes; the "model"
@@ -147,11 +156,7 @@ def make_fl_round(cfg: T.ArchConfig, mesh, param_spec_tree: PyTree,
     pspecs = jax.tree.map(lambda _: P(), param_spec_tree)
     bspec = P(daxes)
 
-    @partial(compat.shard_map, mesh=mesh,
-             in_specs=(pspecs, bspec, bspec, bspec),
-             out_specs=pspecs, check=False,
-             manual_axes=daxes)
-    def fl_round(params, tokens, labels, weights):
+    def fl_body(params, tokens, labels, weights):
         # tokens here: (local_batch, S) -- this mediator's client stream
         from repro.models import layers as _L
         _L.set_manual_axes(daxes)
@@ -181,12 +186,12 @@ def make_fl_round(cfg: T.ArchConfig, mesh, param_spec_tree: PyTree,
         # partial-auto shard_map.
         delta = jax.tree.map(
             lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), w, start)
-        n_m = jnp.sum(weights)
-        num = jax.tree.map(lambda d: jax.lax.psum(d * n_m, daxes), delta)
-        den = jax.lax.psum(n_m, daxes)
-        out = jax.tree.map(
-            lambda p, d: (p + d / den).astype(p.dtype), start, num)
+        avg = psum_eq6(delta, jnp.sum(weights), daxes)
+        out = jax.tree.map(lambda p, d: (p + d).astype(p.dtype), start, avg)
         _L.set_manual_axes(())
         return out
 
-    return fl_round
+    return mediator_shard_map(fl_body, mesh,
+                              in_specs=(pspecs, bspec, bspec, bspec),
+                              out_specs=pspecs, mediator_axes=daxes,
+                              check=False)

@@ -30,6 +30,29 @@ class Model:
     apply: Callable[..., Array]
     num_classes: int
     input_shape: tuple[int, ...]
+    # optional logical-axis annotation: a zero-arg callable returning a
+    # ``models.layers.LogicalParam`` pytree mirroring ``init``'s output, so
+    # the launcher rule tables (launch/sharding.py) can map wide dims onto
+    # the tensor-parallel ``model`` mesh axis. ``None`` => the engine keeps
+    # the parameters replicated along ``model`` (no residency win).
+    param_specs: Callable[[], PyTree] | None = None
+
+
+def _conv_spec(kh, kw, cin, cout):
+    """LogicalParam pair for a conv layer: only the output-channel dim
+    carries a rule-table axis ("mlp" -> model), so tensor sharding never
+    touches a contraction dimension -- which is what keeps the model-axis
+    gather/compute/reshard cycle bitwise (see core/engine.py §8)."""
+    from repro.models import layers as L
+    return {"w": L.LogicalParam((kh, kw, cin, cout),
+                                ("conv", "conv", "conv_in", "mlp")),
+            "b": L.LogicalParam((cout,), ("mlp",))}
+
+
+def _dense_spec(din, dout, out_axis: str = "mlp"):
+    from repro.models import layers as L
+    return {"w": L.LogicalParam((din, dout), ("embed", out_axis)),
+            "b": L.LogicalParam((dout,), (out_axis,))}
 
 
 def _conv_init(key, kh, kw, cin, cout):
@@ -109,7 +132,17 @@ def emnist_cnn(num_classes: int = 47, image_size: int = 28) -> Model:
         x = jax.nn.relu(dense(params["dense1"], x))
         return dense(params["out"], x)
 
-    return Model(init, apply, num_classes, (image_size, image_size, 1))
+    def param_specs():
+        return {
+            "conv1": _conv_spec(5, 5, 1, 12),
+            "conv2": _conv_spec(3, 3, 12, 18),
+            "conv3": _conv_spec(2, 2, 18, 24),
+            "dense1": _dense_spec(flat, 150),
+            "out": _dense_spec(150, num_classes, out_axis="vocab"),
+        }
+
+    return Model(init, apply, num_classes, (image_size, image_size, 1),
+                 param_specs)
 
 
 # --------------------------------------------------------------------------
@@ -153,7 +186,19 @@ def cinic_cnn(num_classes: int = 10, image_size: int = 32, channels: int = 3,
         x = dropout(d3, x, 0.5, train)
         return dense(params["out"], x)
 
-    return Model(init, apply, num_classes, (image_size, image_size, channels))
+    def param_specs():
+        d1 = 512 * width // 32
+        return {
+            "conv1a": _conv_spec(3, 3, channels, w1),
+            "conv1b": _conv_spec(3, 3, w1, w1),
+            "conv2a": _conv_spec(3, 3, w1, w2),
+            "conv2b": _conv_spec(3, 3, w2, w2),
+            "dense1": _dense_spec(flat, d1),
+            "out": _dense_spec(d1, num_classes, out_axis="vocab"),
+        }
+
+    return Model(init, apply, num_classes, (image_size, image_size, channels),
+                 param_specs)
 
 
 def cross_entropy_loss(logits: Array, labels: Array, mask: Array | None = None) -> Array:

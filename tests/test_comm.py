@@ -114,6 +114,33 @@ def test_plan_broadcast_on_the_ledger(model, tiny_federation):
     assert off.comm.total_bytes == 0
 
 
+def test_intra_pod_ledger_never_touches_wan():
+    """Model-axis collectives (the 2-D mesh's per-round tensor-parallel
+    param gather) land on the intra-pod ledger ONLY: the WAN ledger --
+    the denominator of the paper's 82% claim -- must be invariant to the
+    server's model-parallel layout. (The end-to-end version, 2x2 vs 4x1
+    trainers on real devices, is asserted in tests/test_model_mesh.py.)"""
+    m = CommMeter(num_params=1000)
+    m.astraea_round(c=6, gamma=3, mediator_epochs=2)
+    wan = m.total_bytes
+    # 4 devices each all-gather the half of the params they do not hold
+    m.model_axis_round(num_devices=4, model_size=2)
+    assert m.total_bytes == wan                     # WAN untouched
+    assert m.intra_pod_bytes == 4 * m.model_bytes * 0.5
+    assert m.intra_pod_megabytes == pytest.approx(
+        m.intra_pod_bytes / 2 ** 20)
+    m.end_round()
+    assert m.round_log == [wan]                     # round_log is WAN-only
+    # a degenerate model axis charges nothing anywhere
+    m.model_axis_round(num_devices=4, model_size=1)
+    assert m.intra_pod_bytes == 4 * m.model_bytes * 0.5
+    # 4-way model axis: 3/4 of the params ride the interconnect per device
+    m2 = CommMeter(num_params=1000)
+    m2.model_axis_round(num_devices=8, model_size=4)
+    assert m2.intra_pod_bytes == 8 * m2.model_bytes * 0.75
+    assert m2.total_bytes == 0
+
+
 def test_async_trainer_traffic_matches_sync(model, tiny_federation):
     """Waves re-partition WHEN bytes move, not how many: an async run's
     ledger equals the synchronous run's after the same number of rounds."""

@@ -1,0 +1,278 @@
+"""2-D (mediator, model) mesh: tensor-sharded per-mediator model residency.
+
+The contract under test (core/engine.py §8 + launch/mesh.py:make_fl_mesh):
+
+* params shard over the ``model`` axis via the logical-axis rule tables
+  and stay replicated over ``mediator``; client batches/schedules
+  partition over ``mediator`` and never over ``model``;
+* the model-axis gather/compute/reshard cycle moves exact bytes, so the
+  ``2x2`` mesh trajectory is bitwise identical to ``4x1`` (and to the 1-D
+  mediator mesh) for all three client stores under ``row_exec="map"``,
+  sync AND async (S=0), with ``num_round_traces == 1`` throughout;
+* per-device param bytes shrink by the model-axis factor, audited through
+  ``ClientStore.stats()`` and real shard inspection;
+* ``model=1`` reproduces today's 1-D trajectories bitwise.
+
+The 4-device subprocess mirrors tests/test_client_store.py: the device
+count must be forced before jax initializes.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import LocalSpec, augmentation
+from repro.core.engine import EngineConfig, FLRoundEngine
+from repro.launch.mesh import (default_fl_mesh, make_fl_mesh,
+                               make_mediator_mesh, model_axis_size)
+from repro.launch.sharding import (model_only_rules, param_shardings,
+                                   spec_for, TRAIN_RULES)
+from repro.models.cnn import cinic_cnn, emnist_cnn
+from repro.optim import adam
+
+
+@pytest.fixture(scope="module")
+def model(tiny_federation):
+    return emnist_cnn(tiny_federation.num_classes, image_size=16)
+
+
+def _params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_make_fl_mesh_shapes_and_validation():
+    mesh = make_fl_mesh(mediator=1, model=1)
+    assert dict(mesh.shape) == {"mediator": 1, "model": 1}
+    assert model_axis_size(mesh) == 1
+    assert model_axis_size(make_mediator_mesh(1)) == 1
+    with pytest.raises(ValueError, match="model axis"):
+        make_fl_mesh(mediator=1, model=0)
+    # a model axis the device count cannot host is rejected (nd+1 never
+    # divides nd, so this holds on the 1-device container AND the forced
+    # 4-device CI legs)
+    nd = len(jax.devices())
+    with pytest.raises(ValueError, match="divisible"):
+        make_fl_mesh(model=nd + 1)
+    # default_fl_mesh(1) keeps the 1-D mediator mesh (today's programs)
+    assert tuple(default_fl_mesh(1).axis_names) == ("mediator",)
+    if nd % 2 == 0:
+        mesh2 = default_fl_mesh(2)
+        assert dict(mesh2.shape) == {"mediator": nd // 2, "model": 2}
+
+
+def test_cnn_param_specs_mirror_init(tiny_federation):
+    """Both CNNs carry logical-axis spec trees matching their init output
+    (structure AND shapes), so param_shardings can place them."""
+    for m in (emnist_cnn(tiny_federation.num_classes, image_size=16),
+              cinic_cnn(8, image_size=16, width=8)):
+        params = m.init(jax.random.PRNGKey(0))
+        specs = m.param_specs()
+        flat_p, tree_p = jax.tree.flatten(params)
+        flat_s, tree_s = jax.tree.flatten(
+            specs, is_leaf=lambda x: hasattr(x, "axes"))
+        assert tree_p == tree_s
+        for p, s in zip(flat_p, flat_s):
+            assert p.shape == s.shape, s.axes
+
+
+def test_rule_tables_shard_wide_dims_over_model_only(tiny_federation):
+    """spec_for on the FL mesh: output-channel / feature dims ride the
+    ``model`` axis, contraction dims and the mediator axis never shard."""
+    mesh = make_fl_mesh(mediator=1, model=1)
+    model = emnist_cnn(8, image_size=16)
+    shardings = param_shardings(model.param_specs(), mesh, model_only_rules())
+    specs = {k: {n: s.spec for n, s in v.items()}
+             for k, v in shardings.items()}
+    assert specs["conv1"]["w"] == P(None, None, None, "model")
+    assert specs["dense1"]["w"] == P(None, "model")
+    assert specs["out"]["w"] == P(None, "model")      # nc=8 divides
+    for leaf in jax.tree.leaves(shardings,
+                                is_leaf=lambda x: hasattr(x, "spec")):
+        assert "mediator" not in tuple(leaf.spec)     # never over mediator
+    # a dim a bigger model axis does not divide falls back to replicated:
+    # spec_for on a device-free abstract 2-way model axis
+    from repro.launch.compat import abstract_mesh
+    am = abstract_mesh((1, 2), ("mediator", "model"))
+    assert spec_for((47,), ("vocab",), am, model_only_rules()) == P()
+    assert spec_for((48,), ("vocab",), am, model_only_rules()) == P("model")
+
+
+def test_engine_2d_one_device_mesh_bitwise_matches_1d(model,
+                                                      tiny_federation):
+    """A (1,1) 2-D mesh reproduces the 1-D mediator mesh bitwise, aug on,
+    across a reschedule, with one trace -- the model=1 degenerate case."""
+    plan = augmentation.augmentation_plan(
+        tiny_federation.client_counts().sum(0), 0.67)
+    cfg = EngineConfig.astraea(clients_per_round=6, gamma=3,
+                               local=LocalSpec(10, 1), seed=0,
+                               pad_mediators_to=2,
+                               reschedule_every_round=True)
+
+    def run(mesh):
+        e = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                          mesh=mesh, aug_plan=plan)
+        e.run_round()
+        e.run_round()
+        return e
+
+    e2d = run(make_fl_mesh(mediator=1, model=1))
+    e1d = run(make_mediator_mesh(1))
+    _params_equal(e2d.params, e1d.params)
+    assert e2d.num_round_traces == 1
+    st = e2d.store.stats()
+    assert st["model_axis"] == 1
+    assert st["per_device_param_bytes"] == \
+        e1d.store.stats()["per_device_param_bytes"]
+    # model=1: no intra-pod collectives, identical WAN ledger
+    assert e2d.comm.intra_pod_bytes == 0
+    assert e2d.comm.total_bytes == e1d.comm.total_bytes
+
+
+def test_trainer_model_parallel_knob(model, tiny_federation):
+    """The trainer surface: model_parallel picks the mesh, an impossible
+    factor is rejected, and the knob is ignored when a mesh is given."""
+    from repro.core.astraea import AstraeaTrainer
+    from repro.core.fedavg import FedAvgTrainer
+    tr = AstraeaTrainer(model, adam(1e-3), tiny_federation,
+                        clients_per_round=6, gamma=3, local=LocalSpec(10, 1),
+                        alpha=None, seed=0, model_parallel=1)
+    assert tuple(tr.engine.mesh.axis_names) == ("mediator",)
+    tr.run_round()
+    bad = len(jax.devices()) + 1        # nd+1 never divides nd
+    with pytest.raises(ValueError, match="divisible"):
+        AstraeaTrainer(model, adam(1e-3), tiny_federation,
+                       clients_per_round=6, gamma=3, local=LocalSpec(10, 1),
+                       alpha=None, seed=0, model_parallel=bad)
+    with pytest.raises(ValueError, match="divisible"):
+        FedAvgTrainer(model, adam(1e-3), tiny_federation,
+                      clients_per_round=4, local=LocalSpec(10, 1),
+                      seed=0, model_parallel=bad)
+    # explicit mesh wins over the knob
+    fa = FedAvgTrainer(model, adam(1e-3), tiny_federation,
+                       clients_per_round=4, local=LocalSpec(10, 1), seed=0,
+                       mesh=make_mediator_mesh(1), model_parallel=None)
+    fa.run_round()
+    assert fa.engine.num_round_traces == 1
+
+
+def test_model_unannotated_falls_back_to_replicated(tiny_federation):
+    """A Model without param_specs still runs on a 2-D mesh -- params stay
+    replicated along model (no residency win, no crash)."""
+    m = dataclasses.replace(emnist_cnn(8, image_size=16), param_specs=None)
+    eng = FLRoundEngine(
+        m, adam(1e-3), tiny_federation,
+        EngineConfig.astraea(clients_per_round=4, gamma=2,
+                             local=LocalSpec(10, 1), seed=0),
+        mesh=make_fl_mesh(mediator=1, model=1))
+    eng.run_round()
+    assert eng._param_shardings is None
+
+
+_MULTI_DEVICE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ.pop("ASTRAEA_MODEL_PARALLEL", None)
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.core import LocalSpec, augmentation
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    from repro.core.async_engine import AsyncRoundEngine, AsyncSpec
+    from repro.core.staleness import StragglerSpec
+    from repro.data.federated import partition, EMNIST_LIKE
+    from repro.launch.mesh import make_fl_mesh, make_mediator_mesh
+    from repro.models.cnn import emnist_cnn
+    from repro.optim import adam
+
+    spec = dataclasses.replace(EMNIST_LIKE, num_classes=8, image_size=16)
+    fed = partition(spec, num_clients=12, total_samples=600, test_samples=160,
+                    sizes="instagram", global_dist="letterfreq",
+                    local="random", seed=0, name="tiny")
+    model = emnist_cnn(8, image_size=16)
+    plan = augmentation.augmentation_plan(fed.client_counts().sum(0), 0.67)
+    base = EngineConfig.astraea(clients_per_round=6, gamma=3,
+                                local=LocalSpec(10, 1), seed=0,
+                                pad_mediators_to=4, row_exec="map",
+                                donate_params=False,
+                                reschedule_every_round=True)
+    m22 = make_fl_mesh(mediator=2, model=2)
+    m41 = make_fl_mesh(mediator=4, model=1)
+
+    def run(mesh, store, async_spec=None):
+        cfg = dataclasses.replace(base, store=store)
+        e = FLRoundEngine(model, adam(1e-3), fed, cfg, mesh=mesh,
+                          aug_plan=plan)
+        r = e if async_spec is None else AsyncRoundEngine(e, async_spec)
+        r.run_round()
+        r.run_round()
+        return r
+
+    def check(a, b, tag):
+        for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=tag)
+
+    # (a) 2x2 == 4x1 bitwise for ALL THREE stores (online aug riding along)
+    runs = {}
+    for store in ("replicated", "sharded", "host"):
+        e22, e41 = run(m22, store), run(m41, store)
+        check(e22, e41, store)
+        assert e22.num_round_traces == 1 and e41.num_round_traces == 1
+        assert e22.num_schedule_packs == 2
+        runs[store] = (e22, e41)
+    # ... and 4x1 == today's 1-D mediator mesh (model=1 reproduction claim)
+    check(run(make_mediator_mesh(4), "replicated"), runs["replicated"][1],
+          "2d-vs-1d")
+
+    # (b) per-device param bytes shrink by the model-axis factor, via
+    # ClientStore.stats() AND real addressable-shard inspection
+    e22, e41 = runs["replicated"]
+    s22, s41 = e22.store.stats(), e41.store.stats()
+    assert s22["model_axis"] == 2 and s41["model_axis"] == 1
+    assert s22["per_device_param_bytes"] * 2 == s41["per_device_param_bytes"]
+    for leaf in jax.tree.leaves(e22.params):
+        shards = leaf.addressable_shards
+        assert len(shards) == 4
+        # every emnist leaf dim the rules shard divides by 2: each device
+        # holds exactly half the leaf (replicated over mediator rows)
+        assert all(s.data.nbytes * 2 == leaf.nbytes for s in shards)
+    for leaf in jax.tree.leaves(e41.params):
+        assert all(s.data.nbytes == leaf.nbytes
+                   for s in leaf.addressable_shards)
+    # the client axis partitions over the mediator submesh rows (2 on the
+    # 2x2 mesh), never over model
+    assert runs["sharded"][0].store.per_device_bytes() * 2 == \\
+        runs["replicated"][0].store.per_device_bytes()
+
+    # (c) async S=0 on the 2-D mesh: bitwise-sync, one trace, aug on
+    aspec = AsyncSpec(staleness_bound=0, wave_size=1,
+                      straggler=StragglerSpec(model="fixed", seed=0))
+    a22 = run(m22, "replicated", aspec)
+    check(a22, e22, "async-s0-2x2")
+    assert a22.engine.num_round_traces == 1
+
+    # (d) ledger split: model parallelism charges intra-pod bytes only --
+    # the WAN ledger is invariant to the server's model-parallel layout
+    assert e22.comm.total_bytes == e41.comm.total_bytes
+    assert e22.comm.intra_pod_bytes > 0 and e41.comm.intra_pod_bytes == 0
+    print("OK")
+""")
+
+
+def test_2d_mesh_multi_device(tmp_path):
+    """The ISSUE-5 acceptance claims on a real 4-device mesh (subprocess:
+    the device count must be forced before jax initializes)."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _MULTI_DEVICE_SCRIPT],
+                          env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "OK" in proc.stdout

@@ -203,6 +203,98 @@ def test_fedavg_online_aug(model, tiny_federation):
                       local=LocalSpec(10, 1), alpha=0.5, aug_mode="eager")
 
 
+def test_adaptive_plan_refreshes_per_reschedule(model, tiny_federation):
+    """Per-round adaptive rebalancing (PR-4 follow-up): the Alg. 2 plan is
+    recomputed from the selected cohort's label histograms at every
+    reschedule, re-broadcast to the cohort (metered), handed to the
+    round as an operand -- and the one compiled executable is reused."""
+    c = 6
+    tr = _trainer(model, tiny_federation, adaptive_plan=True)
+    eng = tr.engine
+    k = tiny_federation.num_clients
+    nc = tiny_federation.num_classes
+    # init: the global plan broadcast to every client
+    assert eng.comm.total_bytes == nc * 4 * k
+    plans = []
+    for r in range(3):
+        tr.run_round()
+        assert eng.last_plan is not None and eng.last_plan.shape == (nc,)
+        plans.append(eng.last_plan.copy())
+        # Alg. 3 packs by the cohort plan's expected post-aug histograms
+        np.testing.assert_allclose(
+            eng._counts, tiny_federation.client_counts()
+            * (1.0 + eng.last_plan.astype(np.float64)))
+        # each reschedule re-broadcast the plan to its c-client cohort,
+        # on top of the §IV-C per-round model legs
+        from repro.models.cnn import count_params
+        w = count_params(tr.params) * 4
+        round_bytes = 2 * w * (c * 1 + -(-c // 3))      # E_m=1, gamma=3
+        assert eng.comm.total_bytes == pytest.approx(
+            nc * 4 * (k + (r + 1) * c) + (r + 1) * round_bytes)
+    # the cohorts differ, so at least one refreshed plan must differ from
+    # the initial global plan (seeded selection; holds for this federation)
+    assert any(not np.array_equal(p, tr.augmentation_plan) for p in plans)
+    # operand swap, not re-trace: still exactly one compiled round
+    assert eng.num_round_traces == 1
+    assert eng.num_schedule_packs == 3
+
+
+def test_adaptive_plan_changes_training_vs_static(model, tiny_federation):
+    """The refreshed cohort plans must actually reach the in-round hook:
+    an adaptive run diverges from the static-plan run once a cohort's
+    histogram differs from the global one."""
+    static = _trainer(model, tiny_federation)
+    adapt = _trainer(model, tiny_federation, adaptive_plan=True)
+    diverged = False
+    for _ in range(3):
+        static.run_round()
+        adapt.run_round()
+        if not np.array_equal(adapt.engine.last_plan,
+                              static.augmentation_plan):
+            diverged = True
+    assert diverged
+    same = all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(
+        jax.tree.leaves(static.params), jax.tree.leaves(adapt.params)))
+    assert not same
+
+
+def test_adaptive_plan_validation(model, tiny_federation):
+    """adaptive_plan needs the online pipeline (alpha set, online mode);
+    the engine refuses adaptivity without an installed hook."""
+    with pytest.raises(ValueError, match="adaptive_plan"):
+        _trainer(model, tiny_federation, adaptive_plan=True, alpha=None)
+    with pytest.raises(ValueError, match="adaptive_plan"):
+        _trainer(model, tiny_federation, adaptive_plan=True,
+                 aug_mode="materialized")
+    with pytest.raises(ValueError, match="adaptive_aug_alpha"):
+        FLRoundEngine(model, adam(1e-3), tiny_federation,
+                      EngineConfig.astraea(clients_per_round=6, gamma=3,
+                                           local=LocalSpec(10, 1)),
+                      mesh=make_mediator_mesh(1), adaptive_aug_alpha=0.67)
+
+
+def test_adaptive_plan_installs_hook_on_balanced_data(model, tiny_federation):
+    """A balanced federation yields an all-zero initial plan; adaptive mode
+    must still install the in-round hook (a later cohort may drift),
+    unlike the static zero-plan fast path."""
+    from repro.data.federated import FederatedDataset
+    rng = np.random.default_rng(0)
+    nc = tiny_federation.num_classes
+    imgs = [rng.normal(size=(nc * 4, 16, 16, 1)).astype(np.float32)
+            for _ in range(6)]
+    labels = [np.tile(np.arange(nc), 4).astype(np.int64) for _ in range(6)]
+    fed = FederatedDataset(imgs, labels, tiny_federation.test_images,
+                           tiny_federation.test_labels, nc, "balanced")
+    kw = dict(clients_per_round=4, gamma=2, local=LocalSpec(8, 1), seed=0,
+              mesh=make_mediator_mesh(1))
+    tr = AstraeaTrainer(model, adam(1e-3), fed, alpha=0.67,
+                        adaptive_plan=True, **kw)
+    assert np.all(tr.augmentation_plan == 0)
+    assert tr.engine._aug_plan is not None      # hook installed anyway
+    tr.run_round()
+    assert tr.engine.num_round_traces == 1
+
+
 def test_eq6_weights_are_expected_post_aug_sizes(model, tiny_federation):
     """With the plan on, a mediator's Eq. 6 weight becomes
     sum(mask * (1 + plan[y])) over its clients -- the *expected
@@ -215,7 +307,7 @@ def test_eq6_weights_are_expected_post_aug_sizes(model, tiny_federation):
         eng.ensure_schedule()
     keys = eng._round_keys(row_to_group, m_real)
     _, weights = eng.wave_fn(eng.params, data_args, plan_args, unperm, slot,
-                             keys)
+                             keys, *eng.aug_args())
     weights = np.asarray(weights)
     idx = np.asarray(plan_args[0])              # replicated store gather ids
     slot_np = np.asarray(slot)
