@@ -629,6 +629,174 @@ def bench_async(scale: E.Scale):
 
 
 # ----------------------------------------------------------------------
+# Million-client streaming ClientStore: bytes-moved and round-time vs K
+# (spill tier + async prefetch), plus the 4-device placement-policy and
+# ragged-vs-gather exchange comparison
+# ----------------------------------------------------------------------
+
+_STORE_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.pop("ASTRAEA_MODEL_PARALLEL", None)
+import json
+import jax
+from repro.core import LocalSpec
+from repro.core.engine import EngineConfig, FLRoundEngine
+from repro.data.synthetic import (SyntheticSpec, StreamingFederation,
+                                  federation_counts)
+from repro.launch.mesh import make_mediator_mesh
+from repro.models.cnn import emnist_cnn
+from repro.optim import adam
+
+spec = SyntheticSpec(num_classes=8, image_size=16)
+stream = StreamingFederation(spec, federation_counts(64, 8, seed=3),
+                             batch_size=12, seed=3)
+fed = stream.materialize()
+model = emnist_cnn(8, image_size=16)
+mesh = make_mediator_mesh(4)
+ROUNDS = 3
+results, params = {}, {}
+for store, exchange in (("replicated", "ragged"), ("sharded", "ragged"),
+                        ("sharded", "gather"), ("host", "ragged"),
+                        ("spilled", "ragged")):
+    eng = FLRoundEngine(
+        model, adam(1e-3), fed,
+        EngineConfig.astraea(clients_per_round=32, gamma=4,
+                             local=LocalSpec(12, 1), store=store,
+                             store_exchange=exchange,
+                             reschedule_every_round=True,
+                             pad_mediators_to=8, seed=0),
+        mesh=mesh)
+    for _ in range(ROUNDS):
+        eng.run_round()
+    jax.block_until_ready(eng.params)
+    key = store if store != "sharded" else store + "-" + exchange
+    results[key] = {
+        "wan_bytes": eng.comm.total_bytes,
+        "intra_pod_bytes": eng.comm.intra_pod_bytes,
+        "store_stream_bytes": eng.comm.store_stream_bytes,
+        "store_exchange_bytes": eng.comm.store_exchange_bytes,
+        "per_device_bytes": eng.store.per_device_bytes(),
+        "traces": eng.num_round_traces,
+    }
+    params[key] = eng.params
+ref = params["replicated"]
+for key, p in params.items():
+    results[key]["bitwise_equal_to_replicated"] = all(
+        bool((a == b).all())
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(p)))
+    assert results[key]["bitwise_equal_to_replicated"], key
+    assert results[key]["traces"] == 1, key
+# the WAN ledger is invariant to placement -- the 82% claim's denominator
+assert len({r["wan_bytes"] for r in results.values()}) == 1
+# the ragged exchange beats the fixed-capacity all_gather on the wire
+assert (results["sharded-ragged"]["store_exchange_bytes"]
+        < results["sharded-gather"]["store_exchange_bytes"])
+print("JSON:" + json.dumps(results))
+"""
+
+
+def bench_store(scale: E.Scale):
+    """ROADMAP item 1 (million-client streaming store). Two parts:
+
+    * ``store/K*`` -- round-time and bytes-moved curves over federation
+      size K in {1e3, 1e4, 1e5, 1e6}, streaming host vs spilled stores
+      over a lazy ``StreamingFederation`` (histograms only; samples
+      synthesized per streamed client). Device residency is pinned by
+      ``clients_per_round``, so ``per_device_bytes`` must not move with
+      K -- the fixed-footprint acceptance bar.
+    * ``store/policies`` -- 4-real-device subprocess: all four placement
+      policies train bitwise-identically with one trace each, the WAN
+      ledger is placement-invariant, and the ragged exchange moves
+      strictly fewer intra-pod bytes than the historical all_gather.
+    """
+    import subprocess
+    import sys
+    import jax
+    from repro.core import LocalSpec
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    from repro.data.synthetic import (SyntheticSpec, StreamingFederation,
+                                      federation_counts)
+    from repro.launch.mesh import make_mediator_mesh
+    from repro.models.cnn import emnist_cnn
+    from repro.optim import adam
+
+    spec = SyntheticSpec(num_classes=8, image_size=16)
+    model = emnist_cnn(8, image_size=16)
+    mesh = make_mediator_mesh(1)
+    rounds_after_warm = 2
+    out = {"curves": {}}
+    for k in (1_000, 10_000, 100_000, 1_000_000):
+        t0 = time.time()
+        counts = federation_counts(k, spec.num_classes, seed=5)
+        stream = StreamingFederation(spec, counts, batch_size=12, seed=5)
+        gen_s = time.time() - t0
+        row = {"federation_gen_s": gen_s}
+        for store in ("host", "spilled"):
+            eng = FLRoundEngine(
+                model, adam(1e-3), stream,
+                EngineConfig.astraea(clients_per_round=16, gamma=4,
+                                     local=LocalSpec(12, 1), store=store,
+                                     reschedule_every_round=True, seed=0),
+                mesh=mesh)
+            t0 = time.time()
+            eng.run_round()                 # compile + first stream
+            jax.block_until_ready(eng.params)
+            warm_s = time.time() - t0
+            t0 = time.time()
+            for _ in range(rounds_after_warm):
+                eng.run_round()
+            jax.block_until_ready(eng.params)
+            us = (time.time() - t0) / rounds_after_warm * 1e6
+            stats = eng.store.stats()
+            row[store] = {
+                "us_per_round": us, "warm_s": warm_s,
+                "per_device_bytes": stats["per_device_bytes"],
+                "streamed_bytes": stats["streamed_bytes"],
+                "stream_ledger_bytes": eng.comm.store_stream_bytes,
+                "wan_bytes": eng.comm.total_bytes,
+                "traces": eng.num_round_traces,
+                "prefetch_hits": stats.get("prefetch_hits"),
+                "cache_hit_rows": stats.get("cache_hit_rows"),
+            }
+            _emit(f"store/K{k}/{store}", us,
+                  f"per_device_bytes={stats['per_device_bytes']};"
+                  f"streamed_mb={stats['streamed_bytes'] / 2**20:.1f};"
+                  f"traces={eng.num_round_traces};"
+                  f"prefetch_hits={stats.get('prefetch_hits', '-')}")
+        out["curves"][f"K{k}"] = row
+    # the footprint must be set by clients_per_round, never by K
+    foot = {r[s]["per_device_bytes"]
+            for r in out["curves"].values() for s in ("host", "spilled")}
+    assert len(foot) == 1, f"device footprint moved with K: {foot}"
+    out["fixed_device_footprint"] = True
+    _emit("store/fixed_footprint", 0.0,
+          f"per_device_bytes={foot.pop()} across K=1e3..1e6")
+
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _STORE_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    line = next(l for l in proc.stdout.splitlines() if l.startswith("JSON:"))
+    policies = json.loads(line[len("JSON:"):])
+    out["policies"] = policies
+    ragged = policies["sharded-ragged"]["store_exchange_bytes"]
+    gathered = policies["sharded-gather"]["store_exchange_bytes"]
+    for key, r in policies.items():
+        _emit(f"store/policies/{key}", 0.0,
+              f"wan_mb={r['wan_bytes'] / 2**20:.2f};"
+              f"exchange_mb={r['store_exchange_bytes'] / 2**20:.2f};"
+              f"bitwise={r['bitwise_equal_to_replicated']};"
+              f"traces={r['traces']}")
+    _emit("store/ragged_vs_gather", 0.0,
+          f"ragged_bytes={ragged:.0f};gather_bytes={gathered:.0f};"
+          f"saved={1 - ragged / gathered:.1%} (4 devices, skewed schedule)")
+    _save("store", out)
+
+
+# ----------------------------------------------------------------------
 # Kernel microbenchmarks (wall time per call, interpret mode on CPU)
 # ----------------------------------------------------------------------
 
@@ -699,6 +867,7 @@ ALL = {
     "epochs": bench_epochs,
     "communication": bench_communication,
     "engine": bench_engine,
+    "store": bench_store,
     "augmentation": bench_augmentation,
     "agg": bench_agg,
     "async": bench_async,

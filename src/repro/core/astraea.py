@@ -63,6 +63,7 @@ class AstraeaTrainer:
     use_kernel_agg: bool = False
     reschedule_every_round: bool = False    # static client data -> schedule once
     store: str = "replicated"               # client-store placement policy
+    store_exchange: str = "ragged"          # sharded serve exchange mode
     # padded mediator count; defaults to ceil(c / gamma) -- the exact output
     # size of Alg. 3 -- so reschedules never re-jit the round executable
     pad_mediators_to: int | None = None
@@ -103,7 +104,8 @@ class AstraeaTrainer:
                 local=self.local, mediator_epochs=self.mediator_epochs,
                 use_kernel_agg=self.use_kernel_agg,
                 reschedule_every_round=self.reschedule_every_round,
-                store=self.store, pad_mediators_to=pad_m,
+                store=self.store, store_exchange=self.store_exchange,
+                pad_mediators_to=pad_m,
                 donate_params=False, seed=self.seed),
             mesh=mesh, aug_plan=engine_plan,
             adaptive_aug_alpha=adaptive_alpha)

@@ -234,6 +234,10 @@ class AsyncRoundEngine:
                 # a round's fixed byte total
                 eng.comm.model_axis_round(eng._msize * eng._model_size,
                                           eng._model_size)
+            if eng.store.exchange_bytes_per_round:
+                # each wave runs the full padded-M program, so the sharded
+                # serve exchange rides the interconnect once per wave
+                eng.comm.store_exchange(eng.store.exchange_bytes_per_round)
             self._pending.append(_PendingWave(
                 r, wi, t0 + wstats["wave_times"][wi], rows, vals, wts))
         eng.comm.end_round()

@@ -4,42 +4,76 @@ The FL round engine never touches raw client arrays; it talks to a
 ``ClientStore`` that owns the packed per-client buffers and knows how to
 turn a host-side gather schedule (``idx (M_pad, gamma)`` client ids +
 0/1 ``slot`` mask) into per-slot device tensors inside the shard_mapped
-round. Three placement policies trade memory for traffic:
+round. Four placement policies trade memory for traffic:
 
-===========  ====================  =======================================
-policy       per-device bytes      per-schedule traffic
-===========  ====================  =======================================
+===========  ====================  =========================================
+policy       per-device bytes      per-schedule / per-round traffic
+===========  ====================  =========================================
 replicated   K * slice             none (gathers are device-local)
-sharded      ceil(K / n) * slice   all_gather of <= min(M_pad * gamma,
-                                   K_local) *scheduled* slices per shard
-host         U_cap * slice         host->device copy of the <= c unique
-             (U_cap = min(K, c))   scheduled clients, once per reschedule
-===========  ====================  =======================================
+sharded      ceil(K / n) * slice   per ROUND, serve-slice exchange over the
+                                   mediator interconnect -- ``ragged``
+                                   (default): each serve slice rides a
+                                   point-to-point ppermute ring to exactly
+                                   the rows that read it (bytes = occupied
+                                   pair slots); ``gather``: the historical
+                                   fixed-capacity all_gather of n*F slices
+                                   to every device
+host         U_cap * slice         per RESCHEDULE, host->device copy of the
+             (U_cap = min(K, c))   <= c unique scheduled clients
+spilled      U_cap * slice         same stream as ``host``, but the packed
+             (+ U_cap-row RAM      federation lives in a disk/mmap tier (or
+             cache on the host)    a lazy per-client synthesizer) and the
+                                   NEXT reschedule's unique clients prefetch
+                                   on a background thread while the current
+                                   round computes; rows reused across
+                                   consecutive schedules come from the RAM
+                                   cache instead of disk
+===========  ====================  =========================================
 
 ``replicated`` is PR-1's behavior: every device holds the whole federation
 (fastest, but K is bounded by one device's HBM). ``sharded`` partitions
 the client axis over the ``mediator`` mesh axis: device ``d`` owns clients
 ``[d * K_local, (d+1) * K_local)``; at schedule time the store remaps each
 mediator's global client ids into (a) direct reads from the local shard
-when the mediator's device owns the client and (b) positions in a
-``serve`` buffer of scheduled slices that each owner contributes to one
-``all_gather`` -- only scheduled clients ride the interconnect, never the
+when the mediator's device owns the client and (b) positions in per-device
+exchange buffers -- only scheduled clients ride the interconnect, never the
 store. ``host`` keeps the federation in host RAM and streams the compact
 unique-scheduled slice (padded to the static capacity ``U_cap`` so the
-round executable never re-specializes) to device once per reschedule: the
-federation only has to fit in host memory, and device residency is O(c).
+round executable never re-specializes) to device once per reschedule.
+``spilled`` is the million-client tier: device residency stays O(c) and the
+*host* footprint drops to the U_cap-row cache -- the federation itself is a
+``MmapClients`` disk tier (packed arrays spilled to memmaps) or any lazy
+row source (e.g. ``data.synthetic.StreamingFederation``, which synthesizes
+a client's samples deterministically on demand, so a K=1e6 federation
+never materializes anywhere).
 
-All three are **bit-identical**: gathers and copies move exact values, the
-round program consumes identical per-slot tensors, and the engine
-replicates the stacked mediator outputs before aggregation so the FP
-reduction order never depends on the mesh (see ``FLRoundEngine``).
+All four are **bit-identical**: gathers, permutes and copies move exact
+values, the round program consumes identical per-slot tensors, and the
+engine replicates the stacked mediator outputs before aggregation so the
+FP reduction order never depends on the mesh (see ``FLRoundEngine``).
+Prefetched rows are produced by the same fetch path as synchronous reads,
+so the spill tier's overlap changes *when* bytes move, never which bytes.
+
+Exchange accounting: stores report what their plan moves -- the engine
+charges ``last_stream_bytes`` (host->device, once per reschedule) and
+``exchange_bytes_per_round`` (mediator interconnect, every round the plan
+executes) onto the ``CommMeter`` **intra-pod** ledger, keyed separately
+from the model-axis collectives. The ragged exchange is charged the exact
+occupied pair slots (what a true ragged collective ships); the historical
+``gather`` mode is charged its full fixed capacity ``n * (n-1) * F``
+slices, which is what ``all_gather`` physically moves. The WAN ledger is
+invariant to the placement policy by construction -- placement is a
+server-side deployment detail (asserted in tests/test_comm.py).
 
 Locality: the ``sharded`` store routes mediator placement through
 ``scheduling.place_mediators`` so each mediator lands on the shard owning
-most of its clients -- minimizing occupied ``all_gather`` slots (the
-cross-shard fetch count is surfaced in ``last_placement_stats``). The
-serve capacity is the static worst case ``min(M_pad * gamma, K_local)``,
-so reschedules at fixed M never change shapes and never re-jit.
+most of its clients -- minimizing occupied exchange slots (the cross-shard
+fetch count is surfaced in ``last_placement_stats``). Capacities are
+static worst cases (``F = min(M_pad * gamma, K_local)`` for the gather
+serve buffer, ``R = min(M_local * gamma, K_local)`` per ragged pair hop),
+so reschedules at fixed M never change shapes and never re-jit; the
+*accounted* ragged bytes are the occupied slots, the honest traffic of a
+shape-dynamic deployment.
 
 2-D mesh note: on a ``(mediator, model)`` mesh every placement policy
 partitions the *client* axis over the mediator submesh rows only -- the
@@ -61,6 +95,9 @@ policy/residency pair the benchmarks and byte tests audit.
 """
 from __future__ import annotations
 
+import os
+import tempfile
+import threading
 from typing import Any
 
 import jax
@@ -69,15 +106,86 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import scheduling
-from repro.launch.mesh import mediator_sharding, replicated_sharding
+from repro.launch.mesh import (mediator_sharding, replicated_sharding,
+                               ring_permutation)
 
 Arrays = Any
 
-POLICIES = ("replicated", "sharded", "host")
+POLICIES = ("replicated", "sharded", "host", "spilled")
+EXCHANGES = ("ragged", "gather")
 
 
 def _bytes(*arrays) -> int:
     return int(sum(a.nbytes for a in arrays))
+
+
+# --------------------------------------------------------------------------
+# Row sources: where the packed federation physically lives.  The streaming
+# stores (host / spilled) read batches of client rows through this tiny
+# protocol -- ``num_clients``, ``row_specs`` (trailing shape + dtype per
+# x/y/mask array), ``nbytes_per_client`` and ``rows(ids)`` -- so the same
+# store code serves RAM arrays, a disk/mmap spill tier, or a lazy
+# synthesizer that never materializes the federation at all.
+# --------------------------------------------------------------------------
+
+class PackedClients:
+    """The packed ``(K, pad, ...)`` federation held in host RAM."""
+
+    def __init__(self, xs, ys, mask):
+        self._arrays = (np.asarray(xs), np.asarray(ys), np.asarray(mask))
+
+    @property
+    def num_clients(self) -> int:
+        return int(self._arrays[0].shape[0])
+
+    @property
+    def row_specs(self) -> tuple:
+        return tuple((a.shape[1:], a.dtype) for a in self._arrays)
+
+    @property
+    def nbytes_per_client(self) -> int:
+        return _bytes(*(a[:1] for a in self._arrays))
+
+    def rows(self, ids: np.ndarray) -> tuple:
+        return tuple(a[ids] for a in self._arrays)
+
+
+class MmapClients:
+    """Disk/mmap tier: the packed federation spilled to per-array memmaps.
+
+    Construction writes each packed array once and drops the RAM copy; row
+    reads fancy-index the memmaps, touching only the requested clients'
+    pages. Reads are deterministic (plain bytes), which is what makes
+    prefetched and synchronously-streamed slices bit-identical.
+    """
+
+    def __init__(self, xs, ys, mask, spill_dir: str | None = None):
+        self.spill_dir = spill_dir or tempfile.mkdtemp(prefix="astraea-spill-")
+        os.makedirs(self.spill_dir, exist_ok=True)
+        self._maps = []
+        for name, a in (("x", xs), ("y", ys), ("m", mask)):
+            a = np.asarray(a)
+            mm = np.memmap(os.path.join(self.spill_dir, f"clients_{name}.mmap"),
+                           dtype=a.dtype, mode="w+", shape=a.shape)
+            mm[:] = a
+            mm.flush()
+            self._maps.append(mm)
+
+    @property
+    def num_clients(self) -> int:
+        return int(self._maps[0].shape[0])
+
+    @property
+    def row_specs(self) -> tuple:
+        return tuple((a.shape[1:], a.dtype) for a in self._maps)
+
+    @property
+    def nbytes_per_client(self) -> int:
+        return _bytes(*(a[:1] for a in self._maps))
+
+    def rows(self, ids: np.ndarray) -> tuple:
+        # fancy indexing a memmap materializes exactly the requested rows
+        return tuple(np.asarray(a[ids]) for a in self._maps)
 
 
 class ClientStore:
@@ -94,10 +202,18 @@ class ClientStore:
     * ``slot_data(data_args, plan_args)``: traced *inside* shard_map;
       returns this device's ``(M_local, gamma, pad, ...)`` x/y/mask
       slot tensors (mask still unscaled by the slot mask).
+
+    Traffic surface (read by the engine, charged on the CommMeter's
+    intra-pod ledger): ``last_stream_bytes`` is what the latest ``plan``
+    moved host->device (once per reschedule); ``exchange_bytes_per_round``
+    is what every execution of the current plan moves over the mediator
+    interconnect (the sharded store's serve exchange).
     """
 
     policy: str
     permutes_rows = False
+    last_stream_bytes: int = 0
+    exchange_bytes_per_round: int = 0
     # (per_device_param_bytes, model_axis) reported by the engine after it
     # places the model parameters (sharded over the ``model`` mesh axis on
     # a 2-D mesh); None until an engine adopts the store
@@ -167,21 +283,40 @@ class ShardedStore(ClientStore):
 
     Schedule-time remapping (``plan``) splits every active slot ``(r, g)``
     into *local* (client owned by row ``r``'s device: read straight from
-    the shard at ``lpos``) or *remote* (the owner appends the client --
-    deduplicated -- to its ``serve`` list; the slot reads the
-    ``all_gather``-ed serve buffers at ``rpos``). Serve lists are padded
-    to the static capacity ``F = min(M_pad * gamma, K_local)`` -- a device
-    can never serve more distinct clients than it owns, nor more than the
-    schedule holds -- so the gather program is shape-stable across
-    reschedules.
+    the shard at ``lpos``) or *remote* (read from exchanged serve buffers
+    at ``rpos``). The split and dedup are fully vectorized numpy --
+    ``np.nonzero`` row-major order reproduces the historical per-slot
+    visit order exactly, so the emitted plan tensors are byte-identical to
+    the old interpreter loop (which cost O(M_pad * gamma) python per
+    reschedule and stalled large-M schedules).
+
+    Two exchange modes, bit-identical trajectories:
+
+    * ``ragged`` (default): a point-to-point ppermute ring. At hop
+      ``s = 1..n-1`` shard ``o`` ships shard ``(o+s) % n`` exactly the
+      slices that shard's rows read (deduplicated per (owner, reader)
+      pair, padded to the static per-pair capacity
+      ``R = min(M_local * gamma, K_local)``). A slice wanted by no remote
+      row never rides the interconnect; the accounted bytes are the
+      occupied pair slots.
+    * ``gather``: the historical fixed-capacity ``all_gather`` -- every
+      device receives every shard's full ``F = min(M_pad * gamma,
+      K_local)``-slice serve buffer (globally deduplicated), moving
+      ``n * (n-1) * F`` slices per round regardless of who reads what.
+      Kept as the equivalence oracle and the bytes baseline.
     """
 
     policy = "sharded"
     permutes_rows = True
+    exchange = "gather"       # class default keeps plan()-only construction
     data_specs = (P("mediator"), P("mediator"), P("mediator"))
     plan_specs = (P("mediator"), P("mediator"), P("mediator"), P("mediator"))
 
-    def __init__(self, xs, ys, mask, mesh):
+    def __init__(self, xs, ys, mask, mesh, *, exchange: str = "ragged"):
+        if exchange not in EXCHANGES:
+            raise ValueError(f"unknown exchange {exchange!r}; "
+                             f"expected one of {EXCHANGES}")
+        self.exchange = exchange
         self._n = int(mesh.shape["mediator"])
         k = xs.shape[0]
         k_pad = ((k + self._n - 1) // self._n) * self._n
@@ -190,6 +325,7 @@ class ShardedStore(ClientStore):
                 [a, np.zeros((k_pad - k,) + a.shape[1:], a.dtype)])
             xs, ys, mask = grow(xs), grow(ys), grow(mask)
         self._k_local = k_pad // self._n
+        self._slice_nbytes = _bytes(xs[:1], ys[:1], mask[:1])
         shard = mediator_sharding(mesh)
         self._x = jax.device_put(jnp.asarray(xs), shard)
         self._y = jax.device_put(jnp.asarray(ys), shard)
@@ -205,44 +341,149 @@ class ShardedStore(ClientStore):
         self.last_placement_stats = stats
         return row_to_group
 
+    @staticmethod
+    def _group_positions(keys: np.ndarray, num_groups: int) -> np.ndarray:
+        """Position of each element within its key's group, preserving the
+        input (encounter) order inside every group -- the vectorized
+        equivalent of walking the elements and bumping a per-key fill
+        counter."""
+        perm = np.argsort(keys, kind="stable")
+        counts = np.bincount(keys, minlength=num_groups)
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        pos = np.empty(keys.size, np.int64)
+        pos[perm] = np.arange(keys.size) - np.repeat(starts, counts)
+        return pos
+
     def plan(self, idx, slot):
         m_pad, gamma = idx.shape
-        m_local = m_pad // self._n
-        f = max(1, min(m_pad * gamma, self._k_local))
-        serve = np.zeros((self._n, f), np.int32)
-        served: dict[int, tuple[int, int]] = {}   # cid -> (owner, slot)
-        fill = [0] * self._n
+        m_local = max(1, m_pad // self._n)
+        # np.nonzero is row-major: identical visit order to the historical
+        # ``for r, g in np.argwhere(slot > 0)`` loop, so first-encounter
+        # dedup below fills serve lists in byte-identical order
+        rr, gg = np.nonzero(slot > 0)
+        cids = idx[rr, gg].astype(np.int64)
+        owners = cids // self._k_local
+        readers = rr // m_local
+        remote = owners != readers
         loc = np.ones((m_pad, gamma), bool)       # inactive slots: local row 0
         lpos = np.zeros((m_pad, gamma), np.int32)
         rpos = np.zeros((m_pad, gamma), np.int32)
-        for r, g in np.argwhere(slot > 0):
-            cid = int(idx[r, g])
-            own = self.owner(cid)
-            if own == r // m_local:
-                lpos[r, g] = cid % self._k_local
-                continue
-            if cid not in served:
-                served[cid] = (own, fill[own])
-                serve[own, fill[own]] = cid % self._k_local
-                fill[own] += 1
-            own, j = served[cid]
-            loc[r, g] = False
-            rpos[r, g] = own * f + j
+        lpos[rr[~remote], gg[~remote]] = \
+            (cids[~remote] % self._k_local).astype(np.int32)
+        loc[rr[remote], gg[remote]] = False
+        if self.exchange == "gather":
+            plan_args, occupied, capacity = self._plan_gather(
+                m_pad, gamma, rr, gg, cids, remote, loc, lpos, rpos)
+        else:
+            plan_args, occupied, capacity = self._plan_ragged(
+                m_pad, gamma, m_local, rr, gg, cids, owners, readers, remote,
+                loc, lpos, rpos)
+        slice_nb = getattr(self, "_slice_nbytes", 0)
+        if self.exchange == "gather":
+            # all_gather ships every shard's full padded serve buffer to
+            # the (n - 1) other devices, occupied or not
+            self.exchange_bytes_per_round = \
+                capacity * (self._n - 1) * slice_nb
+        else:
+            # a ragged collective ships exactly the occupied pair slots
+            self.exchange_bytes_per_round = occupied * slice_nb
         if self.last_placement_stats is not None:
-            self.last_placement_stats["serve_capacity"] = int(self._n * f)
-            self.last_placement_stats["serve_occupied"] = int(sum(fill))
-        return ((self._x, self._y, self._m),
-                (jnp.asarray(serve), jnp.asarray(loc), jnp.asarray(lpos),
-                 jnp.asarray(rpos)))
+            self.last_placement_stats["serve_capacity"] = int(capacity)
+            self.last_placement_stats["serve_occupied"] = int(occupied)
+            self.last_placement_stats["exchange"] = self.exchange
+        return (self._x, self._y, self._m), plan_args
+
+    def _plan_gather(self, m_pad, gamma, rr, gg, cids, remote, loc, lpos,
+                     rpos):
+        """Globally-deduplicated serve lists for the fixed-capacity
+        all_gather; byte-identical to the historical interpreter loop."""
+        f = max(1, min(m_pad * gamma, self._k_local))
+        serve = np.zeros((self._n, f), np.int32)
+        rc = cids[remote]
+        occupied = 0
+        if rc.size:
+            uq, first, inv = np.unique(rc, return_index=True,
+                                       return_inverse=True)
+            enc = np.argsort(first, kind="stable")    # first-encounter order
+            u_cid = uq[enc]
+            u_own = u_cid // self._k_local
+            j = self._group_positions(u_own, self._n)  # per-owner fill order
+            serve[u_own, j] = (u_cid % self._k_local).astype(np.int32)
+            enc_rank = np.empty(uq.size, np.int64)
+            enc_rank[enc] = np.arange(uq.size)
+            pos = u_own * f + j                        # rpos = owner*F + fill
+            rpos[rr[remote], gg[remote]] = pos[enc_rank[inv]].astype(np.int32)
+            occupied = int(uq.size)
+        return ((jnp.asarray(serve), jnp.asarray(loc), jnp.asarray(lpos),
+                 jnp.asarray(rpos)), occupied, self._n * f)
+
+    def _plan_ragged(self, m_pad, gamma, m_local, rr, gg, cids, owners,
+                     readers, remote, loc, lpos, rpos):
+        """Per-(owner, reader)-pair send lists for the ppermute ring.
+
+        A slice is deduplicated per *pair* (a cid read on two reader
+        shards ships to both -- that is what "only to the rows that read
+        it" costs) and lands in the reader's receive buffer at
+        ``(hop - 1) * R + pair_fill``, which is what ``rpos`` indexes.
+        """
+        n = self._n
+        r_cap = max(1, min(m_local * gamma, self._k_local))
+        send = np.zeros((n, max(n - 1, 1), r_cap), np.int32)
+        rc = cids[remote]
+        occupied = 0
+        if rc.size:
+            k_pad = n * self._k_local
+            code = (owners[remote] * n + readers[remote]) * k_pad + rc
+            uq, first, inv = np.unique(code, return_index=True,
+                                       return_inverse=True)
+            enc = np.argsort(first, kind="stable")
+            u_code = uq[enc]
+            u_pair = u_code // k_pad
+            u_cid = u_code % k_pad
+            u_own = u_pair // n
+            u_hop = (u_pair % n - u_own) % n           # reader = owner + hop
+            j = self._group_positions(u_pair, n * n)
+            if int(j.max(initial=-1)) >= r_cap:        # cannot happen: a
+                raise AssertionError(                  # pair holds <= R cids
+                    "ragged pair capacity overflow (internal invariant)")
+            send[u_own, u_hop - 1, j] = (u_cid % self._k_local).astype(np.int32)
+            enc_rank = np.empty(uq.size, np.int64)
+            enc_rank[enc] = np.arange(uq.size)
+            pos = (u_hop - 1) * r_cap + j              # reader-local rpos
+            rpos[rr[remote], gg[remote]] = pos[enc_rank[inv]].astype(np.int32)
+            occupied = int(uq.size)
+        return ((jnp.asarray(send), jnp.asarray(loc), jnp.asarray(lpos),
+                 jnp.asarray(rpos)), occupied, n * max(n - 1, 1) * r_cap)
 
     def slot_data(self, data, plan):
-        serve, loc, lpos, rpos = plan
-        srv = serve.reshape(-1)                   # this device's (F,) serve list
+        if self.exchange == "gather":
+            serve, loc, lpos, rpos = plan
+            srv = serve.reshape(-1)               # this device's (F,) serve list
+
+            def pick(shard):
+                gathered = jax.lax.all_gather(shard[srv], "mediator", tiled=True)
+                local = shard[lpos]               # (M_local, gamma, pad, ...)
+                remote = gathered[rpos]
+                sel = loc.reshape(loc.shape + (1,) * (local.ndim - 2))
+                return jnp.where(sel, local, remote)
+
+            return tuple(pick(a) for a in data)
+
+        send, loc, lpos, rpos = plan
+        n = self._n
+        sidx = send[0]                            # this device's (n-1, R) lists
 
         def pick(shard):
-            gathered = jax.lax.all_gather(shard[srv], "mediator", tiled=True)
-            local = shard[lpos]                   # (M_local, gamma, pad, ...)
-            remote = gathered[rpos]
+            local = shard[lpos]
+            if n == 1:                            # no remote slots exist
+                return local
+            # hop s: shard o ships its (o -> o+s) pair list to shard o+s;
+            # the receive buffer concatenates hops in order, matching the
+            # plan-side rpos layout (hop-1)*R + pair_fill
+            chunks = [jax.lax.ppermute(shard[sidx[s - 1]], "mediator",
+                                       ring_permutation(n, s))
+                      for s in range(1, n)]
+            remote = jnp.concatenate(chunks, axis=0)[rpos]
             sel = loc.reshape(loc.shape + (1,) * (local.ndim - 2))
             return jnp.where(sel, local, remote)
 
@@ -250,6 +491,12 @@ class ShardedStore(ClientStore):
 
     def per_device_bytes(self) -> int:
         return _bytes(self._x, self._y, self._m) // self._n
+
+    def stats(self) -> dict:
+        row = super().stats()
+        row["exchange"] = self.exchange
+        row["exchange_bytes_per_round"] = self.exchange_bytes_per_round
+        return row
 
 
 class HostStore(ClientStore):
@@ -259,53 +506,201 @@ class HostStore(ClientStore):
     the <= ``U_cap`` *unique* scheduled clients (padded to the static
     capacity so shapes, and hence the compiled round, are stable) and
     remaps the gather indices into that compact buffer -- the round then
-    runs exactly like the replicated store over the small slice.
+    runs exactly like the replicated store over the small slice. The
+    remap is ``np.searchsorted`` over the sorted uniques: O(c log c) per
+    reschedule, independent of K (the historical dense ``(K,)`` remap
+    array cost O(K) host time/memory per reschedule even when the
+    schedule touched c << K clients).
+
+    Streaming traffic is surfaced (``stats()["streamed_bytes"]``) and
+    reported to the engine through ``last_stream_bytes`` so every
+    host->device copy lands on the CommMeter's intra-pod ledger.
     """
 
     policy = "host"
     data_specs = (P(), P(), P())
     plan_specs = (P("mediator"),)
 
-    def __init__(self, xs, ys, mask, mesh, capacity):
-        self._xs, self._ys, self._mask = xs, ys, mask   # host numpy
-        self._cap = max(1, min(xs.shape[0], capacity))
+    def __init__(self, xs, ys, mask, mesh, capacity, *, source=None):
+        self._src = source if source is not None else PackedClients(xs, ys, mask)
+        self._cap = max(1, min(self._src.num_clients, capacity))
         self._rep = replicated_sharding(mesh)
         self._streamed_bytes = 0
+        self.num_streams = 0
+
+    def _staged_rows(self, uniq: np.ndarray) -> tuple:
+        """Host staging buffers, padded to ``U_cap`` rows (the spill tier
+        overrides this with its cache/prefetch path)."""
+        return self._fetch_rows(uniq)
+
+    def _fetch_rows(self, uniq: np.ndarray) -> tuple:
+        out = tuple(np.zeros((self._cap,) + shape, dtype)
+                    for shape, dtype in self._src.row_specs)
+        if uniq.size:
+            for buf, rows in zip(out, self._src.rows(uniq)):
+                buf[:uniq.size] = rows
+        return out
 
     def plan(self, idx, slot):
         uniq = np.unique(idx[slot > 0])
         if uniq.size > self._cap:
             raise ValueError(f"schedule touches {uniq.size} unique clients; "
-                             f"host store capacity is {self._cap}")
-        remap = np.zeros(self._xs.shape[0], np.int32)
-        remap[uniq] = np.arange(uniq.size, dtype=np.int32)
-        idx_c = np.where(slot > 0, remap[idx], 0).astype(np.int32)
-
-        def stream(a):
-            out = np.zeros((self._cap,) + a.shape[1:], a.dtype)
-            out[:uniq.size] = a[uniq]
-            return jax.device_put(jnp.asarray(out), self._rep)
-
-        data = (stream(self._xs), stream(self._ys), stream(self._mask))
-        self._streamed_bytes += _bytes(*data)
+                             f"{self.policy} store capacity is {self._cap}")
+        # compact remap via binary search over the sorted uniques -- every
+        # active slot's cid is in uniq by construction; inactive slots are
+        # masked to row 0 (the historical dense-remap output, byte for byte)
+        idx_c = np.where(slot > 0, np.searchsorted(uniq, idx), 0).astype(np.int32)
+        data = tuple(jax.device_put(jnp.asarray(b), self._rep)
+                     for b in self._staged_rows(uniq))
+        moved = _bytes(*data)
+        self._streamed_bytes += moved
+        self.last_stream_bytes = moved
+        self.num_streams += 1
         return data, (jnp.asarray(idx_c),)
 
     slot_data = ReplicatedStore.slot_data
 
     def per_device_bytes(self) -> int:
-        slice_bytes = _bytes(self._xs[:1], self._ys[:1], self._mask[:1])
-        return self._cap * slice_bytes
+        return self._cap * self._src.nbytes_per_client
+
+    def stats(self) -> dict:
+        row = super().stats()
+        row["streamed_bytes"] = self._streamed_bytes
+        row["num_streams"] = self.num_streams
+        return row
 
 
-def build_client_store(policy: str, xs, ys, mask, mesh, *,
-                       capacity: int | None = None) -> ClientStore:
-    """Build the packed client store under ``policy`` (see module docstring)."""
+class SpilledHostStore(HostStore):
+    """Disk/mmap-tier federation with a U_cap RAM cache + async prefetch.
+
+    The ``host`` streaming contract, minus the host-RAM federation: rows
+    come from a spill tier (``MmapClients``, or any lazy row source such
+    as ``StreamingFederation``). Two mechanisms keep the stream off the
+    round's critical path:
+
+    * **RAM cache**: the previous reschedule's staged ``U_cap`` rows are
+      kept; clients reused by the next schedule are copied from RAM
+      instead of re-read from the tier.
+    * **Async prefetch**: ``prefetch(ids)`` stages the *next* reschedule's
+      unique clients on a daemon thread (the engine calls it right after
+      packing the current schedule, so the disk reads overlap the round's
+      device compute). ``plan`` joins the thread and uses the staged
+      buffers when they match; a mismatched prefetch falls back to the
+      synchronous fetch -- same fetch path, so prefetched and synchronous
+      streams are bit-identical (asserted in tests).
+    """
+
+    policy = "spilled"
+
+    def __init__(self, xs, ys, mask, mesh, capacity, *, source=None,
+                 spill_dir: str | None = None):
+        if source is None:
+            source = MmapClients(xs, ys, mask, spill_dir)
+        super().__init__(None, None, None, mesh, capacity, source=source)
+        self._cache: tuple[np.ndarray, tuple] | None = None  # (uniq, bufs)
+        self._inflight: tuple | None = None   # (thread, uniq, result box)
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self.cache_hit_rows = 0
+        self.tier_rows = 0
+
+    def _fetch(self, uniq: np.ndarray, cache) -> tuple:
+        """Stage ``uniq`` rows, reusing the RAM cache where possible.
+        Returns ``(buffers, cached_rows, tier_rows)``."""
+        out = tuple(np.zeros((self._cap,) + shape, dtype)
+                    for shape, dtype in self._src.row_specs)
+        todo = np.ones(uniq.size, bool)
+        cached = 0
+        if cache is not None and uniq.size:
+            prev_uniq, prev_bufs = cache
+            common, pos_new, pos_prev = np.intersect1d(
+                uniq, prev_uniq, assume_unique=True, return_indices=True)
+            if common.size:
+                for buf, pbuf in zip(out, prev_bufs):
+                    buf[pos_new] = pbuf[pos_prev]
+                todo[pos_new] = False
+                cached = int(common.size)
+        miss = np.flatnonzero(todo)
+        if miss.size:
+            for buf, rows in zip(out, self._src.rows(uniq[miss])):
+                buf[miss] = rows
+        return out, cached, int(miss.size)
+
+    def prefetch(self, ids: np.ndarray) -> None:
+        """Stage the next reschedule's unique clients in the background."""
+        self._join_inflight()
+        uniq = np.unique(np.asarray(ids))
+        if uniq.size > self._cap:
+            return                        # plan() will raise; nothing to stage
+        box: dict = {}
+        cache = self._cache               # snapshot: plan() only swaps after join
+
+        def work():
+            box["result"] = self._fetch(uniq, cache)
+
+        thread = threading.Thread(target=work, daemon=True,
+                                  name="astraea-spill-prefetch")
+        thread.start()
+        self._inflight = (thread, uniq, box)
+
+    def _join_inflight(self):
+        if self._inflight is not None:
+            self._inflight[0].join()
+
+    def _staged_rows(self, uniq: np.ndarray) -> tuple:
+        bufs = None
+        if self._inflight is not None:
+            thread, pre_uniq, box = self._inflight
+            thread.join()
+            self._inflight = None
+            if "result" in box and np.array_equal(pre_uniq, uniq):
+                bufs, cached, tier = box["result"]
+                self.prefetch_hits += 1
+            else:
+                self.prefetch_misses += 1
+        if bufs is None:
+            bufs, cached, tier = self._fetch(uniq, self._cache)
+        self.cache_hit_rows += cached
+        self.tier_rows += tier
+        self._cache = (uniq, bufs)        # becomes next reschedule's RAM cache
+        return bufs
+
+    def stats(self) -> dict:
+        row = super().stats()
+        row.update(prefetch_hits=self.prefetch_hits,
+                   prefetch_misses=self.prefetch_misses,
+                   cache_hit_rows=self.cache_hit_rows,
+                   tier_rows=self.tier_rows)
+        if hasattr(self._src, "spill_dir"):
+            row["spill_dir"] = self._src.spill_dir
+        return row
+
+
+def build_client_store(policy: str, xs=None, ys=None, mask=None, mesh=None, *,
+                       capacity: int | None = None, exchange: str = "ragged",
+                       spill_dir: str | None = None,
+                       source=None) -> ClientStore:
+    """Build the packed client store under ``policy`` (see module docstring).
+
+    ``xs/ys/mask`` are the packed host arrays; the streaming policies
+    (``host``/``spilled``) alternatively accept ``source``, a row source
+    (``PackedClients``/``MmapClients``/``StreamingFederation``-like) that
+    is never materialized as one array -- the million-client path.
+    """
+    if source is not None and policy not in ("host", "spilled"):
+        raise ValueError(f"client-store policy {policy!r} needs the packed "
+                         "arrays; streaming row sources require the 'host' "
+                         "or 'spilled' policy")
     if policy == "replicated":
         return ReplicatedStore(xs, ys, mask, mesh)
     if policy == "sharded":
-        return ShardedStore(xs, ys, mask, mesh)
-    if policy == "host":
-        return HostStore(xs, ys, mask, mesh,
-                         capacity if capacity is not None else xs.shape[0])
+        return ShardedStore(xs, ys, mask, mesh, exchange=exchange)
+    if policy in ("host", "spilled"):
+        if capacity is None:
+            capacity = source.num_clients if source is not None else xs.shape[0]
+        if policy == "host":
+            return HostStore(xs, ys, mask, mesh, capacity, source=source)
+        return SpilledHostStore(xs, ys, mask, mesh, capacity, source=source,
+                                spill_dir=spill_dir)
     raise ValueError(f"unknown client-store policy {policy!r}; "
                      f"expected one of {POLICIES}")

@@ -34,12 +34,23 @@ each reschedule's cohort, one ``plan_broadcast`` charge per reschedule.
 
 **Two ledgers, never mixed.** ``total_bytes`` is the WAN ledger: traffic
 that crosses the client<->server boundary, the quantity the paper's 82%
-claim is a ratio of.  ``intra_pod_bytes`` is the datacenter ledger: the
-tensor-parallel collectives of the 2-D ``(mediator, model)`` mesh (the
-per-round model-axis param gather, ``model_axis_round``).  Model
-parallelism is a server-side deployment detail -- it moves bytes over the
-pod interconnect, not the WAN -- so it must never inflate ``total_bytes``
-(asserted in tests/test_comm.py).
+claim is a ratio of.  ``intra_pod_bytes`` is the datacenter ledger,
+fed by three server-side sources, each with its own breakdown counter:
+
+* ``model_axis_round`` -- the 2-D mesh's tensor-parallel param gather
+  (``model_axis_tp_bytes``);
+* ``store_stream`` -- the host->device copy the streaming client stores
+  (``host``/``spilled``) make once per reschedule
+  (``store_stream_bytes``);
+* ``store_exchange`` -- the sharded store's per-round serve-slice
+  exchange over the mediator interconnect (``store_exchange_bytes``);
+  ragged mode charges the exact occupied slices, gather mode the full
+  fixed-capacity all_gather.
+
+Client placement and model parallelism are server-side deployment
+details -- they move bytes over the pod interconnect or the host link,
+not the WAN -- so none of them may inflate ``total_bytes`` (asserted in
+tests/test_comm.py: the WAN ledger is invariant to store policy).
 """
 from __future__ import annotations
 
@@ -52,7 +63,12 @@ class CommMeter:
     num_params: int
     bytes_per_param: int = 4
     total_bytes: float = 0.0            # WAN ledger (client <-> server)
-    intra_pod_bytes: float = 0.0        # datacenter ledger (model-axis TP)
+    intra_pod_bytes: float = 0.0        # datacenter ledger (model-axis TP
+    #                                     + client-store stream/exchange)
+    # intra-pod breakdown (each sums into intra_pod_bytes)
+    model_axis_tp_bytes: float = 0.0
+    store_stream_bytes: float = 0.0
+    store_exchange_bytes: float = 0.0
     # cumulative total_bytes after each synchronization round (one entry
     # per round, appended by the engine via end_round)
     round_log: list = field(default_factory=list)
@@ -79,8 +95,25 @@ class CommMeter:
         must be invariant to the server's model-parallel layout."""
         if model_size <= 1:
             return
-        self.intra_pod_bytes += (num_devices * self.model_bytes
-                                 * (model_size - 1) / model_size)
+        moved = (num_devices * self.model_bytes
+                 * (model_size - 1) / model_size)
+        self.model_axis_tp_bytes += moved
+        self.intra_pod_bytes += moved
+
+    def store_stream(self, nbytes: float) -> None:
+        """Host->device streaming by a host/spilled client store, charged
+        once per reschedule (the store reports the exact padded buffer
+        bytes it device_put).  Intra-pod ledger only: placement policy
+        must never move the WAN ledger."""
+        self.store_stream_bytes += nbytes
+        self.intra_pod_bytes += nbytes
+
+    def store_exchange(self, nbytes: float) -> None:
+        """Serve-slice exchange by the sharded client store over the
+        mediator interconnect, charged every time the round program
+        executes the current plan (per round, or per async wave)."""
+        self.store_exchange_bytes += nbytes
+        self.intra_pod_bytes += nbytes
 
     # ---- one-off accounting ----
     def plan_broadcast(self, num_entries: int, num_clients: int,

@@ -13,27 +13,49 @@ What makes it an engine rather than a trainer loop:
 
 1. **Pack once, place by policy.** The padded per-client arrays
    ``(K, pad, ...)`` are packed at construction into a ``ClientStore``
-   (``core/client_store.py``) under one of three placement policies:
+   (``core/client_store.py``) under one of four placement policies:
 
    * ``replicated`` -- the whole store on every device. Fastest gathers;
      per-device bytes = K * slice, so K is bounded by one device's HBM.
    * ``sharded`` -- client axis partitioned over the ``mediator`` mesh
      axis (per-device bytes = K/n * slice). Each mediator's ``x_all[idx]``
      gather is routed at schedule time: locally-owned clients read from
-     the device's shard; remote ones ride one ``all_gather`` of only the
-     *scheduled* slices (capacity ``min(M_pad * gamma, K_local)``, static
-     across reschedules). Mediator rows are placed by the locality pass
+     the device's shard; remote ones ride the serve-slice exchange --
+     by default a *ragged* point-to-point ppermute ring that ships each
+     slice only to the shards whose rows read it
+     (``cfg.store_exchange="ragged"``), or the historical fixed-capacity
+     ``all_gather`` of every shard's full serve buffer (``"gather"``);
+     both are static-shaped across reschedules and bit-identical.
+     Mediator rows are placed by the locality pass
      ``scheduling.place_mediators`` to minimize cross-shard fetches.
    * ``host`` -- the federation stays in host RAM (per-device bytes =
      min(K, c) * slice); the unique scheduled clients are streamed to
      device once per reschedule into a fixed-capacity compact buffer.
+   * ``spilled`` -- the streaming contract of ``host`` with the
+     federation itself demoted to a disk/mmap tier (or a lazy row
+     source) behind a ``min(K, c)``-row RAM cache; when rescheduling
+     every round, the engine pre-draws the NEXT round's selection and
+     hands it to ``store.prefetch`` so the tier reads overlap the
+     current round's device compute (the rng draw order is unchanged,
+     so trajectories stay bitwise identical).
+
+   The engine also accepts a *streaming federation* instead of packed
+   arrays -- any ``data`` without ``client_images`` but with the row-
+   source protocol (``rows(ids)``/``num_clients``/``nbytes_per_client``
+   + ``pad``/``num_classes``/``client_counts()``; see
+   ``data.synthetic.StreamingFederation``) feeds the host/spilled
+   stores directly, so a K=1e6 federation runs rounds on a device (and
+   host) footprint fixed by ``clients_per_round``, never by K.
 
    A schedule is a tiny ``(M, gamma)`` int32 gather index plus a 0/1 slot
    mask; ``run_round`` never rebuilds host buffers (the old trainers
    re-packed ``(M, gamma, pad, ...)`` on the host every round). Slot-mask
    zeros make empty client slots exact no-ops (masked loss is 0 => zero
    grads => zero Adam updates), so a dummy slot may harmlessly gather any
-   resident row.
+   resident row.  Store traffic is metered: host->device streaming and
+   the sharded serve exchange land on the CommMeter's intra-pod ledger
+   (``store_stream`` / ``store_exchange``); the WAN ledger is invariant
+   to placement policy.
 2. **Mediator sharding.** Mediators are distributed over the ``mediator``
    axis of a device mesh via shard_map; ``M`` is padded up to the mesh
    size with zero-weight dummy mediators (also exact no-ops). On a 1-device
@@ -149,7 +171,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import augmentation, scheduling
-from repro.core.client_store import POLICIES, build_client_store
+from repro.core.client_store import EXCHANGES, POLICIES, build_client_store
 from repro.core.comm import CommMeter
 from repro.core.fl import (LocalSpec, evaluate, make_client_update,
                            weighted_average)
@@ -256,6 +278,9 @@ class EngineConfig:
     schedule: str = "kld"                   # "kld" (Alg. 3) | "random"
     aggregate: str = "delta"                # "delta" (Astraea) | "weights" (FedAvg)
     store: str = "replicated"               # client-store placement policy
+    # sharded store serve exchange: "ragged" (ppermute ring, exact bytes)
+    # or "gather" (historical fixed-capacity all_gather); bit-identical
+    store_exchange: str = "ragged"
     # per-device mediator-row execution: "vmap" vectorizes rows (fastest on
     # few devices), "map" runs them serially with a batch-size-invariant
     # program, making trajectories bit-identical across ANY mesh size (XLA
@@ -282,6 +307,9 @@ class EngineConfig:
         if self.store not in POLICIES:
             raise ValueError(f"unknown client-store policy {self.store!r}; "
                              f"expected one of {POLICIES}")
+        if self.store_exchange not in EXCHANGES:
+            raise ValueError(f"unknown store_exchange {self.store_exchange!r}; "
+                             f"expected one of {EXCHANGES}")
         if self.row_exec not in ("vmap", "map"):
             raise ValueError(f"unknown row_exec {self.row_exec!r}")
         if self.warp_impl not in augmentation.WARP_IMPLS:
@@ -327,19 +355,39 @@ class FLRoundEngine:
                              "time)")
         self._adaptive_alpha = adaptive_aug_alpha
 
-        sizes = [x.shape[0] for x in data.client_images]
-        pad = _pad_multiple(max(sizes), cfg.local.batch_size)
-        # packed ONCE into the placement-policy store (replicated buffers,
-        # client-sharded buffers, or host RAM -- see core/client_store.py).
-        # With online augmentation the store holds the RAW clients: the
-        # warped copies only ever exist inside the round program.
-        xs, ys, mask = data.padded(pad)
-        self.store = build_client_store(
-            cfg.store, xs, ys, mask, self.mesh,
-            capacity=min(cfg.clients_per_round, data.num_clients))
+        capacity = min(cfg.clients_per_round, data.num_clients)
+        if hasattr(data, "client_images"):
+            sizes = [x.shape[0] for x in data.client_images]
+            pad = _pad_multiple(max(sizes), cfg.local.batch_size)
+            # packed ONCE into the placement-policy store (replicated
+            # buffers, client-sharded buffers, host RAM, or a disk/mmap
+            # spill tier -- see core/client_store.py). With online
+            # augmentation the store holds the RAW clients: the warped
+            # copies only ever exist inside the round program.
+            xs, ys, mask = data.padded(pad)
+            self.store = build_client_store(
+                cfg.store, xs, ys, mask, self.mesh, capacity=capacity,
+                exchange=cfg.store_exchange)
+        else:
+            # streaming federation (row-source protocol, e.g.
+            # data.synthetic.StreamingFederation): clients are fetched /
+            # synthesized on demand by the streaming stores -- the
+            # federation is never materialized, so only the policies with
+            # O(c) residency can serve it
+            if cfg.store not in ("host", "spilled"):
+                raise ValueError(
+                    f"streaming federations require the 'host' or 'spilled' "
+                    f"client store, got {cfg.store!r}")
+            if data.pad % cfg.local.batch_size:
+                raise ValueError(
+                    f"streaming federation pad {data.pad} is not a multiple "
+                    f"of batch_size {cfg.local.batch_size}")
+            self.store = build_client_store(
+                cfg.store, mesh=self.mesh, capacity=capacity, source=data)
         self._raw_counts = data.client_counts()
         self._counts = self._raw_counts
         self._rng = np.random.default_rng(cfg.seed)
+        self._pending_sel: np.ndarray | None = None
 
         # ---- params: model-axis sharded at rest, replicated otherwise ----
         # On a 2-D mesh each device holds 1/model of every rule-table-
@@ -608,6 +656,10 @@ class FLRoundEngine:
         dummy_rows = np.flatnonzero(row_to_group < 0)
         unperm = np.concatenate([row_of, dummy_rows]).astype(np.int32)
         data_args, plan_args = self.store.plan(idx, slot)
+        if self.store.last_stream_bytes:
+            # host->device streaming is pod-side traffic: intra-pod ledger
+            # only, so the WAN bytes stay invariant to placement policy
+            self.comm.store_stream(self.store.last_stream_bytes)
         if getattr(self.store, "last_placement_stats", None):
             self.last_schedule_stats = {**(self.last_schedule_stats or {}),
                                         **self.store.last_placement_stats}
@@ -630,12 +682,27 @@ class FLRoundEngine:
     # driving
     # ------------------------------------------------------------------
     def ensure_schedule(self) -> tuple:
-        """(Re)pack the gather schedule if this round needs one."""
+        """(Re)pack the gather schedule if this round needs one.
+
+        With a prefetch-capable store (``spilled``) and per-round
+        rescheduling, the NEXT round's selection is pre-drawn here and
+        staged in the background, so the spill-tier reads overlap this
+        round's device compute. The rng draws happen in the same order
+        as the eager path (round r's selection is always the (r+1)-th
+        ``choice`` call), so trajectories are bitwise unchanged."""
         cfg = self.cfg
         c = min(cfg.clients_per_round, self.data.num_clients)
         if cfg.reschedule_every_round or self._schedule is None:
-            sel = self._rng.choice(self.data.num_clients, size=c, replace=False)
+            if self._pending_sel is not None:
+                sel, self._pending_sel = self._pending_sel, None
+            else:
+                sel = self._rng.choice(self.data.num_clients, size=c,
+                                       replace=False)
             self._schedule = self._pack_schedule(sel)
+            if cfg.reschedule_every_round and hasattr(self.store, "prefetch"):
+                self._pending_sel = self._rng.choice(
+                    self.data.num_clients, size=c, replace=False)
+                self.store.prefetch(self._pending_sel)
         return self._schedule
 
     def run_round(self) -> None:
@@ -655,6 +722,9 @@ class FLRoundEngine:
             # must never pollute the WAN bytes behind the 82% claim
             self.comm.model_axis_round(self._msize * self._model_size,
                                        self._model_size)
+        if self.store.exchange_bytes_per_round:
+            # the sharded serve exchange executes with every round program
+            self.comm.store_exchange(self.store.exchange_bytes_per_round)
         self.comm.end_round()
         self._round += 1
 

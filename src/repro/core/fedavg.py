@@ -39,6 +39,7 @@ class FedAvgTrainer:
     # plan drifts with the per-round client sample)
     adaptive_plan: bool = False
     store: str = "replicated"        # client-store placement policy
+    store_exchange: str = "ragged"   # sharded serve exchange mode
     # padded mediator count; defaults to c (gamma=1) so the per-round
     # random reschedule never re-jits the round executable
     pad_mediators_to: int | None = None
@@ -73,6 +74,7 @@ class FedAvgTrainer:
             self.model, self.opt, self.data,
             EngineConfig.fedavg(clients_per_round=self.clients_per_round,
                                 local=self.local, store=self.store,
+                                store_exchange=self.store_exchange,
                                 pad_mediators_to=pad_m, donate_params=False,
                                 seed=self.seed),
             mesh=mesh, loss_fn=self.loss_fn,

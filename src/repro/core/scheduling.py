@@ -5,12 +5,24 @@ label histogram brings the mediator's *merged* distribution closest to
 uniform (min ``D_KL(P_m + P_k || P_u)``), until it holds ``gamma`` clients;
 then a fresh mediator is created, until no clients remain.
 
-Two implementations, same semantics:
+Two implementations, identical mediator lists:
 
-* ``reschedule`` — numpy greedy loop (exact Alg. 3; O(c^2) like the paper).
-* the inner argmin is vectorized over all candidates via
-  ``distribution.merged_kld_scores`` and can be served by the Pallas
-  ``kld_score`` kernel for large federations (see repro.kernels.kld_score).
+* ``impl="batched"`` (default) — one jitted ``lax.scan`` over the K
+  absorption steps with ``client_counts`` held device-resident and
+  assigned clients masked to ``+inf``; a single device roundtrip per
+  reschedule. The historical per-step dispatch (one
+  ``merged_kld_scores`` call + host argmin per absorbed client) cost
+  O(K) roundtrips — O(K^2) score work issued from the interpreter — and
+  stalled Alg. 3 for minutes at K=1e5.
+* ``impl="loop"`` — the numpy greedy loop (exact Alg. 3 as in the paper;
+  kept as the equivalence oracle, and as the path that can score through
+  the Pallas ``kld_score`` kernel via ``use_kernel=True``).
+
+The two tie-break identically: the loop's ``argmin`` returns the first
+minimum over the unassigned list, which stays in ascending client order;
+the masked argmin returns the lowest client id among the minima. Scores
+match bitwise because both cast counts to f32 before scoring and label
+counts are integer-valued (< 2^24), where f32 accumulation is exact.
 
 We also provide ``random_schedule`` (the FedAvg-style control: clients
 grouped arbitrarily) for the ablations in EXPERIMENTS.md.
@@ -18,9 +30,11 @@ grouped arbitrarily) for the ablations in EXPERIMENTS.md.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import partial
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import distribution as dist
@@ -47,20 +61,60 @@ def _score_candidates(mediator_counts: np.ndarray, candidate_counts: np.ndarray,
                                              jnp.asarray(candidate_counts, jnp.float32)))
 
 
+@partial(jax.jit, static_argnames="gamma")
+def _greedy_picks(counts_f32: jnp.ndarray, gamma: int) -> jnp.ndarray:
+    """Device-resident Alg. 3 inner loop: the full absorption order.
+
+    One ``lax.scan`` step per absorbed client -- score every client
+    against the open mediator (assigned ones masked to ``+inf``), take
+    the first-minimum argmin (the loop's tie-break), absorb, and reset
+    the mediator histogram after every ``gamma`` picks."""
+    k = counts_f32.shape[0]
+
+    def step(carry, _):
+        assigned, med, fill = carry
+        scores = dist.merged_kld_scores(med, counts_f32)
+        pick = jnp.argmin(jnp.where(assigned, jnp.inf, scores))
+        merged = med + counts_f32[pick]
+        full = fill + 1 == gamma
+        med = jnp.where(full, jnp.zeros_like(merged), merged)
+        fill = jnp.where(full, 0, fill + 1)
+        return (assigned.at[pick].set(True), med, fill), pick
+
+    init = (jnp.zeros(k, bool), jnp.zeros(counts_f32.shape[1], jnp.float32),
+            jnp.asarray(0, jnp.int32))
+    return jax.lax.scan(step, init, None, length=k)[1]
+
+
 def reschedule(client_counts: np.ndarray, gamma: int, *,
-               use_kernel: bool = False) -> list[Mediator]:
+               use_kernel: bool = False, impl: str = "auto") -> list[Mediator]:
     """Alg. 3: partition clients into mediators of size <= gamma.
 
     Args:
       client_counts: ``(K, C)`` per-client label histograms (the only thing
         clients share -- never samples).
       gamma: max clients per mediator.
+      use_kernel: score through the Pallas ``kld_score`` kernel (implies
+        the loop implementation, which drives the kernel per step).
+      impl: ``"batched"`` (device-resident scan, one roundtrip),
+        ``"loop"`` (numpy greedy oracle), or ``"auto"`` (batched unless
+        ``use_kernel``). Both produce identical mediator lists.
 
     Returns:
       List of ``Mediator``; every client appears in exactly one.
     """
+    if impl not in ("auto", "batched", "loop"):
+        raise ValueError(f"unknown reschedule impl {impl!r}")
+    if impl == "auto":
+        impl = "loop" if use_kernel else "batched"
     client_counts = np.asarray(client_counts, np.float64)
     num_clients, num_classes = client_counts.shape
+    if impl == "batched":
+        picks = np.asarray(_greedy_picks(
+            jnp.asarray(client_counts, jnp.float32), int(gamma)))
+        return [Mediator(clients=[int(c) for c in picks[s:s + gamma]],
+                         counts=client_counts[picks[s:s + gamma]].sum(0))
+                for s in range(0, num_clients, gamma)]
     unassigned = list(range(num_clients))
     mediators: list[Mediator] = []
     while unassigned:

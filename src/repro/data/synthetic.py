@@ -8,6 +8,17 @@ variant, leaving headroom for imbalance effects to be measured -- which is
 all the paper's experiments need (DESIGN.md §2).
 
 Generation is numpy (cheap, done once); training consumes jnp arrays.
+
+Million-client scale: ``federation_counts`` draws a K-client federation's
+per-client label histograms in one vectorized pass (Dirichlet skew +
+batched multinomial -- no sample is ever materialized), and
+``StreamingFederation`` wraps them as a lazy *row source* for the
+streaming client stores: a client's padded ``(pad, ...)`` x/y/mask rows
+are synthesized deterministically on demand from a per-client seed
+sequence, so the same client id always yields byte-identical rows no
+matter when -- or on which thread -- it is streamed (the spill store's
+prefetch-correctness anchor), and total footprint is histograms
+(K x C ints) plus the <= c clients in flight, never K x samples.
 """
 from __future__ import annotations
 
@@ -94,3 +105,121 @@ def make_classification_data(spec: SyntheticSpec, counts: np.ndarray, seed: int 
     task = SyntheticTask(spec, seed)
     rng = np.random.default_rng(seed + 1)
     return task.sample_counts(counts, rng)
+
+
+def federation_counts(num_clients: int, num_classes: int, *,
+                      min_samples: int = 24, max_samples: int = 48,
+                      skew: float = 0.3, seed: int = 0) -> np.ndarray:
+    """``(K, C)`` per-client label histograms, no samples materialized.
+
+    One vectorized pass: per-client totals are uniform ints, per-client
+    class mixes are Dirichlet draws (small ``skew`` = non-IID clients
+    concentrated on a few classes, the paper's BAL2-style local
+    imbalance), and the histograms are a single batched multinomial.
+    K=1e6 takes a couple of seconds and ~K * C * 4 bytes -- this is the
+    ONLY per-federation state the streaming pipeline keeps.
+    """
+    rng = np.random.default_rng(seed)
+    totals = rng.integers(min_samples, max_samples + 1, num_clients)
+    mixes = rng.dirichlet(np.full(num_classes, skew), size=num_clients)
+    return rng.multinomial(totals, mixes).astype(np.int32)
+
+
+# per-client seed-sequence salt, so client streams never collide with the
+# federation-level rngs above
+_CLIENT_SALT = 0x5F
+
+
+class StreamingFederation:
+    """Lazy K-client federation: histograms up front, samples on demand.
+
+    Implements both surfaces the streaming engine path needs:
+
+    * the *dataset* surface (``num_clients`` / ``num_classes`` /
+      ``client_counts()`` / ``pad`` / ``test_images`` / ``test_labels``)
+      consumed by ``FLRoundEngine`` for scheduling and eval;
+    * the *row source* protocol (``row_specs`` / ``nbytes_per_client`` /
+      ``rows(ids)``) consumed by the host/spilled client stores: a
+      client's padded x/y/mask rows, synthesized from
+      ``SeedSequence([seed, salt, client_id])`` -- deterministic per id,
+      independent of streaming order and thread.
+
+    Only the small balanced test set is ever materialized.
+    """
+
+    def __init__(self, spec: SyntheticSpec, counts: np.ndarray, *,
+                 batch_size: int = 10, seed: int = 0,
+                 test_per_class: int = 8, name: str = "stream"):
+        self.spec, self.name = spec, name
+        self.task = SyntheticTask(spec, seed)
+        self._counts = np.asarray(counts)
+        self.num_clients, self.num_classes = self._counts.shape
+        if self.num_classes != spec.num_classes:
+            raise ValueError(f"counts have {self.num_classes} classes, "
+                             f"spec has {spec.num_classes}")
+        sizes = self._counts.sum(axis=1)
+        if sizes.min(initial=1) < 1:
+            raise ValueError("every client needs at least one sample")
+        # same padding rule as the engine applies to packed federations,
+        # so a materialized copy of this federation packs byte-identically
+        self.pad = int(-(-int(sizes.max()) // batch_size) * batch_size)
+        self._seed = seed
+        h = spec.image_size
+        self._img_shape = (h, h, spec.channels)
+        rng = np.random.default_rng(seed + 1)
+        self.test_images, self.test_labels = self.task.sample_counts(
+            np.full(self.num_classes, test_per_class), rng)
+
+    def client_counts(self) -> np.ndarray:
+        return self._counts
+
+    # ---- row source protocol (core/client_store.py) ----
+    @property
+    def row_specs(self) -> tuple:
+        return (((self.pad,) + self._img_shape, np.dtype(np.float32)),
+                ((self.pad,), np.dtype(np.int32)),
+                ((self.pad,), np.dtype(np.float32)))
+
+    @property
+    def nbytes_per_client(self) -> int:
+        return sum(int(np.prod(shape)) * dtype.itemsize
+                   for shape, dtype in self.row_specs)
+
+    def _client_rows(self, k: int) -> tuple:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self._seed, _CLIENT_SALT, int(k)]))
+        x, y = self.task.sample_counts(self._counts[k], rng)
+        n = x.shape[0]
+        xs = np.zeros((self.pad,) + self._img_shape, np.float32)
+        ys = np.zeros((self.pad,), np.int32)
+        ms = np.zeros((self.pad,), np.float32)
+        xs[:n], ys[:n], ms[:n] = x, y, 1.0
+        return xs, ys, ms
+
+    def rows(self, ids: np.ndarray) -> tuple:
+        ids = np.asarray(ids)
+        out = tuple(np.empty((ids.size,) + shape, dtype)
+                    for shape, dtype in self.row_specs)
+        for i, k in enumerate(ids):
+            for buf, row in zip(out, self._client_rows(int(k))):
+                buf[i] = row
+        return out
+
+    # ---- equivalence helper (tests / small-K benches) ----
+    def materialize(self):
+        """Realize the whole federation as a packed ``FederatedDataset``
+        -- identical samples to what streaming yields per client, so an
+        engine over the materialized copy (any store policy) is bitwise
+        identical to the streaming engine. Small K only, obviously."""
+        from repro.data.federated import FederatedDataset
+        xs, ys = [], []
+        for k in range(self.num_clients):
+            x, y, m = self._client_rows(k)
+            n = int(m.sum())
+            xs.append(x[:n].copy())
+            ys.append(y[:n].copy())
+        return FederatedDataset(client_images=xs, client_labels=ys,
+                                test_images=self.test_images,
+                                test_labels=self.test_labels,
+                                num_classes=self.num_classes,
+                                name=self.name + "-materialized")

@@ -98,6 +98,21 @@ def data_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def ring_permutation(n: int, step: int) -> list[tuple[int, int]]:
+    """The step-``s`` rotation over an ``n``-device axis, as the
+    ``(source, dest)`` pairs ``jax.lax.ppermute`` wants.
+
+    The ragged client-store exchange decomposes its all-to-all into the
+    ``n - 1`` nonzero rotations of the mediator axis: at hop ``s`` shard
+    ``o`` ships its (owner ``o`` -> reader ``(o + s) % n``) slice list.
+    Every hop is a full permutation (each device sends and receives
+    exactly once), which is what keeps the per-hop buffer shapes static.
+    """
+    if not 0 < step < n:
+        raise ValueError(f"ring step must be in (0, {n}), got {step}")
+    return [(o, (o + step) % n) for o in range(n)]
+
+
 def replicated_sharding(mesh):
     """Every device holds the full array (params, small plan tensors)."""
     from jax.sharding import NamedSharding, PartitionSpec

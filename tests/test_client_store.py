@@ -16,9 +16,11 @@ import textwrap
 import jax
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import LocalSpec, scheduling
-from repro.core.client_store import (HostStore, ShardedStore,
+from repro.core.client_store import (HostStore, MmapClients, PackedClients,
+                                     ShardedStore, SpilledHostStore,
                                      build_client_store)
 from repro.core.engine import EngineConfig, FLRoundEngine
 from repro.launch.mesh import make_mediator_mesh
@@ -51,7 +53,7 @@ def test_stores_bitwise_identical_on_one_device(model, tiny_federation):
                                 pad_mediators_to=2,
                                 reschedule_every_round=True)
     ref = _run(model, tiny_federation, base)
-    for store in ("sharded", "host"):
+    for store in ("sharded", "host", "spilled"):
         eng = _run(model, tiny_federation,
                    dataclasses.replace(base, store=store))
         _params_equal(eng, ref)
@@ -64,7 +66,7 @@ def test_fedavg_stores_bitwise_identical(model, tiny_federation):
     base = EngineConfig.fedavg(clients_per_round=4, local=LocalSpec(10, 1),
                                seed=0, pad_mediators_to=4)
     ref = _run(model, tiny_federation, base, rounds=3)
-    for store in ("sharded", "host"):
+    for store in ("sharded", "host", "spilled"):
         eng = _run(model, tiny_federation,
                    dataclasses.replace(base, store=store), rounds=3)
         _params_equal(eng, ref)
@@ -230,8 +232,9 @@ _MULTI_DEVICE_SCRIPT = textwrap.dedent("""
                                 pad_mediators_to=4,
                                 reschedule_every_round=True)
 
-    def run(store, nd, row_exec="vmap"):
-        cfg = dataclasses.replace(base, store=store, row_exec=row_exec)
+    def run(store, nd, row_exec="vmap", exchange="ragged"):
+        cfg = dataclasses.replace(base, store=store, row_exec=row_exec,
+                                  store_exchange=exchange)
         e = FLRoundEngine(model, adam(1e-3), fed, cfg,
                           mesh=make_mediator_mesh(nd))
         e.run_round()
@@ -242,10 +245,39 @@ _MULTI_DEVICE_SCRIPT = textwrap.dedent("""
         for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
-    # (1) fixed 4-device mesh: all three stores bitwise identical
+    # (1) fixed 4-device mesh: every store policy bitwise identical, and
+    # the sharded store under BOTH exchange modes
     r4, s4, h4 = run("replicated", 4), run("sharded", 4), run("host", 4)
     check(s4, r4)
     check(h4, r4)
+    g4 = run("sharded", 4, exchange="gather")
+    check(g4, r4)
+    sp4 = run("spilled", 4)
+    check(sp4, r4)
+    # per-round reschedules mean the engine prefetched round 2's schedule
+    # while round 1 computed -- and the prefetch was used
+    assert sp4.store.prefetch_hits >= 1, sp4.store.stats()
+    assert sp4.store.prefetch_misses == 0
+    # the ragged exchange never ships more than the fixed all_gather
+    assert s4.store.exchange_bytes_per_round <= g4.store.exchange_bytes_per_round
+    assert g4.store.exchange_bytes_per_round > 0
+
+    # (1b) async S=0 over the spill tier: waves + prefetch overlap still
+    # reproduce the synchronous trajectory bitwise
+    from repro.core.async_engine import AsyncRoundEngine, AsyncSpec
+    from repro.core.staleness import StragglerSpec
+    acfg = dataclasses.replace(base, store="spilled", donate_params=False)
+    sync = FLRoundEngine(model, adam(1e-3), fed, acfg,
+                         mesh=make_mediator_mesh(4))
+    sync.run_round(); sync.run_round()
+    eng = FLRoundEngine(model, adam(1e-3), fed, acfg,
+                        mesh=make_mediator_mesh(4))
+    an = AsyncRoundEngine(eng, AsyncSpec(staleness_bound=0, wave_size=1,
+                                         straggler=StragglerSpec(
+                                             model="lognormal", seed=3)))
+    an.run_round(); an.run_round()
+    check(sync, an.engine)
+    assert an.engine.num_round_traces == 1
 
     # (2) cross-mesh: sharded on 4 devices == replicated on 1 device,
     # bitwise, under the batch-size-invariant row executor
@@ -283,3 +315,236 @@ def test_sharded_and_host_stores_multi_device(tmp_path):
                           env=env, capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
     assert "OK" in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# ShardedStore.plan property tests: adversarial schedules, both exchanges.
+# plan() is pure host index math, so a simulated n-shard layout needs no
+# devices; _simulate_slot_values re-executes the slot_data exchange in
+# numpy on data where shard row j of owner o holds the value o*k_local+j
+# (i.e. the global cid) -- reconstruction must return idx wherever the
+# slot mask is active, which is exactly the brute-force gather oracle.
+# --------------------------------------------------------------------------
+
+def _mk_sharded(n, k_local, exchange):
+    store = ShardedStore.__new__(ShardedStore)   # skip device placement
+    store._n, store._k_local = n, k_local
+    store._x = store._y = store._m = None
+    store._slice_nbytes = 8
+    store.exchange = exchange
+    store.last_placement_stats = {}
+    return store
+
+
+def _simulate_slot_values(store, plan_args, m_pad, gamma):
+    n, k_local = store._n, store._k_local
+    m_local = max(1, m_pad // n)
+    route, loc, lpos, rpos = (np.asarray(a) for a in plan_args)
+    readers = np.arange(m_pad)[:, None] // m_local
+    local_vals = readers * k_local + lpos
+    if store.exchange == "gather":
+        f = route.shape[1]
+        gathered = (np.arange(n)[:, None] * k_local + route).reshape(-1)
+        remote_vals = gathered[rpos]
+    else:
+        r_cap = route.shape[2]
+        recv = np.zeros((n, max(n - 1, 1) * r_cap), np.int64)
+        for d in range(n):
+            for s in range(1, n):       # hop s delivers shard (d-s)%n's list
+                o = (d - s) % n
+                recv[d, (s - 1) * r_cap:s * r_cap] = \
+                    o * k_local + route[o, s - 1]
+        remote_vals = recv[readers, rpos]
+    return np.where(loc, local_vals, remote_vals)
+
+
+def _check_plan(store, idx, slot):
+    """Plan + brute-force reconstruction + static-capacity invariants."""
+    _, plan_args = store.plan(idx, slot)
+    sim = _simulate_slot_values(store, plan_args, *idx.shape)
+    active = np.asarray(slot) > 0
+    np.testing.assert_array_equal(sim[active], idx[active].astype(np.int64))
+    stats = store.last_placement_stats
+    assert 0 <= stats["serve_occupied"] <= stats["serve_capacity"]
+    loc, rpos = np.asarray(plan_args[1]), np.asarray(plan_args[3])
+    if store.exchange == "gather":
+        bound = store._n * np.asarray(plan_args[0]).shape[1]
+    else:
+        bound = max(store._n - 1, 1) * np.asarray(plan_args[0]).shape[2]
+    assert rpos[~loc].max(initial=0) < bound     # serve fill never overflows
+    return plan_args, stats
+
+
+@pytest.mark.parametrize("exchange", ["gather", "ragged"])
+def test_plan_all_remote_schedule(exchange):
+    """Adversarial: every active slot reads a non-owned client -- no local
+    reads, every value reconstructs through the exchange buffers, and the
+    occupied count equals the dedup key count."""
+    n, k_local, gamma = 4, 3, 2
+    store = _mk_sharded(n, k_local, exchange)
+    m_pad = 4                                    # m_local=1: reader = row
+    rng_ = np.random.default_rng(0)
+    idx = np.empty((m_pad, gamma), np.int32)
+    for r in range(m_pad):
+        others = [c for c in range(n * k_local) if c // k_local != r]
+        idx[r] = rng_.choice(others, gamma)
+    slot = np.ones((m_pad, gamma), np.float32)
+    plan_args, stats = _check_plan(store, idx, slot)
+    assert not np.asarray(plan_args[1]).any()    # loc: nothing local
+    if exchange == "gather":
+        assert stats["serve_occupied"] == np.unique(idx).size
+    else:                       # per-pair dedup: distinct (reader, cid) here
+        assert stats["serve_occupied"] == \
+            len({(r, int(c)) for r in range(m_pad) for c in idx[r]})
+
+
+@pytest.mark.parametrize("exchange", ["gather", "ragged"])
+def test_plan_all_duplicate_schedule(exchange):
+    """Adversarial: every slot reads the SAME client. Dedup collapses the
+    exchange to one slice (gather) / one slice per remote reader (ragged)."""
+    n, k_local, gamma = 4, 3, 3
+    store = _mk_sharded(n, k_local, exchange)
+    m_pad = 8                                    # m_local = 2
+    hot = 4                                      # owned by shard 1
+    idx = np.full((m_pad, gamma), hot, np.int32)
+    slot = np.ones((m_pad, gamma), np.float32)
+    plan_args, stats = _check_plan(store, idx, slot)
+    loc = np.asarray(plan_args[1])
+    assert loc[2:4].all() and not loc[[0, 1, 4, 5, 6, 7]].any()
+    if exchange == "gather":
+        assert stats["serve_occupied"] == 1
+        rpos = np.asarray(plan_args[3])
+        assert np.unique(rpos[~loc]).size == 1   # every reader shares the slot
+    else:
+        assert stats["serve_occupied"] == n - 1  # one per (owner, reader) pair
+
+
+@pytest.mark.parametrize("exchange", ["gather", "ragged"])
+def test_plan_single_owner_hot_shard(exchange):
+    """Adversarial: all scheduled clients live on shard 0 (hot shard); the
+    serve fill stays within the static capacity and dedup still holds."""
+    n, k_local, gamma = 4, 8, 2
+    store = _mk_sharded(n, k_local, exchange)
+    m_pad = 4
+    rng_ = np.random.default_rng(1)
+    idx = rng_.integers(0, k_local, (m_pad, gamma)).astype(np.int32)
+    slot = np.ones((m_pad, gamma), np.float32)
+    plan_args, stats = _check_plan(store, idx, slot)
+    remote_cids = {int(c) for r in range(1, m_pad) for c in idx[r]}
+    if exchange == "gather":
+        f = max(1, min(m_pad * gamma, k_local))
+        assert stats["serve_capacity"] == n * f
+        assert stats["serve_occupied"] == len(remote_cids) <= f
+    else:
+        r_cap = max(1, min((m_pad // n) * gamma, k_local))
+        assert np.asarray(plan_args[0]).shape == (n, n - 1, r_cap)
+        assert stats["serve_occupied"] == \
+            len({(r, int(c)) for r in range(1, m_pad) for c in idx[r]})
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([1, 2, 4]),
+       st.integers(1, 5), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from(["gather", "ragged"]))
+def test_plan_random_schedules_reconstruct_bruteforce(seed, n, k_local,
+                                                      m_local, gamma,
+                                                      exchange):
+    """Random meshes x schedules x slot masks: the reconstructed slot
+    values always equal the brute-force gather of idx."""
+    rng_ = np.random.default_rng(seed)
+    m_pad = n * m_local
+    idx = rng_.integers(0, n * k_local, (m_pad, gamma)).astype(np.int32)
+    slot = (rng_.random((m_pad, gamma)) < 0.7).astype(np.float32)
+    _check_plan(_mk_sharded(n, k_local, exchange), idx, slot)
+
+
+def test_ragged_exchange_cheaper_on_locality_skewed_schedule():
+    """The accounting claim, host-side: on a schedule where most reads are
+    local (one hot remote client), the ragged plan charges strictly fewer
+    interconnect bytes than the fixed-capacity all_gather."""
+    n, k_local, gamma, m_pad = 4, 8, 2, 8
+    idx = ((np.arange(8)[:, None] // 2) * k_local +
+           np.arange(2)[None, :]).astype(np.int32)   # every read local...
+    idx[7, 1] = 3                                    # ...but one remote read
+    slot = np.ones((m_pad, gamma), np.float32)
+    ragged = _mk_sharded(n, k_local, "ragged")
+    gather = _mk_sharded(n, k_local, "gather")
+    _check_plan(ragged, idx, slot)
+    _check_plan(gather, idx, slot)
+    assert ragged.exchange_bytes_per_round == 1 * ragged._slice_nbytes
+    f = max(1, min(m_pad * gamma, k_local))
+    assert gather.exchange_bytes_per_round == n * f * (n - 1) * 8
+    assert ragged.exchange_bytes_per_round < gather.exchange_bytes_per_round
+
+
+# --------------------------------------------------------------------------
+# Spill tier: mmap row source, RAM cache, async prefetch correctness
+# --------------------------------------------------------------------------
+
+def _packed_arrays(fed):
+    sizes = [x.shape[0] for x in fed.client_images]
+    pad = ((max(sizes) + 9) // 10) * 10
+    return fed.padded(pad)
+
+
+def test_mmap_clients_matches_ram_source(tiny_federation, tmp_path):
+    """The disk tier is a bit-exact row source: specs, per-client bytes
+    and fancy-indexed rows all match the RAM-packed federation."""
+    xs, ys, mask = _packed_arrays(tiny_federation)
+    src = MmapClients(xs, ys, mask, str(tmp_path / "spill"))
+    ram = PackedClients(xs, ys, mask)
+    assert src.num_clients == ram.num_clients
+    assert src.row_specs == ram.row_specs
+    assert src.nbytes_per_client == ram.nbytes_per_client
+    ids = np.array([3, 0, 7, 11])
+    for a, b in zip(src.rows(ids), ram.rows(ids)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spilled_prefetch_bit_identical_to_sync(tiny_federation, tmp_path):
+    """Prefetched staging is byte-equal to a synchronous stream of the
+    same schedule: the overlap changes WHEN bytes move, never which."""
+    xs, ys, mask = _packed_arrays(tiny_federation)
+    mesh = make_mediator_mesh(1)
+    mk = lambda d: build_client_store("spilled", xs, ys, mask, mesh,
+                                      capacity=4,
+                                      spill_dir=str(tmp_path / d))
+    idx_a = np.array([[0, 3], [7, 1]], np.int32)
+    idx_b = np.array([[7, 2], [5, 3]], np.int32)     # reuses clients 3 and 7
+    slot = np.ones((2, 2), np.float32)
+
+    warm = mk("a")
+    warm.plan(idx_a, slot)                  # populates the RAM cache
+    warm.prefetch(idx_b)                    # background staging
+    data_pre, (remap_pre,) = warm.plan(idx_b, slot)
+    assert warm.prefetch_hits == 1 and warm.prefetch_misses == 0
+    assert warm.cache_hit_rows == 2         # 3 and 7 came from RAM, not disk
+    assert warm.num_streams == 2
+
+    cold = mk("b")
+    cold.plan(idx_a, slot)
+    data_sync, (remap_sync,) = cold.plan(idx_b, slot)    # no prefetch call
+    for a, b in zip(data_pre, data_sync):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(remap_pre),
+                                  np.asarray(remap_sync))
+
+
+def test_spilled_prefetch_mismatch_falls_back(tiny_federation, tmp_path):
+    """A prefetch for the wrong schedule is discarded; plan() streams the
+    actual schedule synchronously and still matches the host store."""
+    xs, ys, mask = _packed_arrays(tiny_federation)
+    mesh = make_mediator_mesh(1)
+    store = build_client_store("spilled", xs, ys, mask, mesh, capacity=4,
+                               spill_dir=str(tmp_path / "s"))
+    slot = np.ones((2, 2), np.float32)
+    store.prefetch(np.array([[0, 1], [2, 3]], np.int32))
+    actual = np.array([[4, 5], [6, 7]], np.int32)
+    data, (remap,) = store.plan(actual, slot)
+    assert store.prefetch_misses == 1 and store.prefetch_hits == 0
+    ref = build_client_store("host", xs, ys, mask, mesh, capacity=4)
+    ref_data, (ref_remap,) = ref.plan(actual, slot)
+    for a, b in zip(data, ref_data):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(remap), np.asarray(ref_remap))
+    assert "spill_dir" in store.stats()

@@ -141,6 +141,50 @@ def test_intra_pod_ledger_never_touches_wan():
     assert m2.total_bytes == 0
 
 
+def test_store_traffic_lands_on_intra_pod_breakdown():
+    """Unit: host->device streaming and the serve exchange accrue on their
+    own intra-pod counters; the WAN ledger never moves."""
+    m = CommMeter(num_params=1000)
+    m.store_stream(100)
+    m.store_exchange(60)
+    m.store_stream(40)
+    assert m.total_bytes == 0
+    assert m.store_stream_bytes == 140 and m.store_exchange_bytes == 60
+    assert m.intra_pod_bytes == 200
+
+
+def test_store_streaming_charged_and_wan_invariant(model, tiny_federation):
+    """End-to-end: every byte the host/spilled stores stream to device is
+    charged to the intra-pod ledger (and only there); the WAN total --
+    the 82% claim's denominator -- is identical under every placement
+    policy, because placement is a server-side deployment detail."""
+    import dataclasses
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    cfg = EngineConfig.astraea(clients_per_round=6, gamma=3,
+                               local=LocalSpec(10, 1), seed=0,
+                               pad_mediators_to=2,
+                               reschedule_every_round=True)
+    engines = {}
+    for store in ("replicated", "sharded", "host", "spilled"):
+        e = FLRoundEngine(model, adam(1e-3), tiny_federation,
+                          dataclasses.replace(cfg, store=store),
+                          mesh=make_mediator_mesh(1))
+        e.run_round()
+        e.run_round()
+        engines[store] = e
+    assert len({e.comm.total_bytes for e in engines.values()}) == 1
+    for name in ("host", "spilled"):
+        e = engines[name]
+        assert e.store._streamed_bytes > 0
+        assert e.comm.store_stream_bytes == e.store._streamed_bytes
+        assert e.store.stats()["streamed_bytes"] == e.store._streamed_bytes
+        assert e.store.stats()["num_streams"] == 2       # one per reschedule
+        assert e.comm.intra_pod_bytes == e.comm.model_axis_tp_bytes + \
+            e.comm.store_stream_bytes + e.comm.store_exchange_bytes
+    rep = engines["replicated"].comm
+    assert rep.store_stream_bytes == 0 and rep.store_exchange_bytes == 0
+
+
 def test_async_trainer_traffic_matches_sync(model, tiny_federation):
     """Waves re-partition WHEN bytes move, not how many: an async run's
     ledger equals the synchronous run's after the same number of rounds."""

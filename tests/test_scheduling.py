@@ -68,6 +68,37 @@ def test_kernel_scoring_matches_reference():
     assert [m.clients for m in m_ref] == [m.clients for m in m_ker]
 
 
+@given(st.integers(0, 200), st.integers(4, 18), st.integers(1, 5),
+       st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_batched_reschedule_matches_numpy_loop(seed, k, gamma, skew):
+    """The device-resident batched Alg. 3 (masked-argmin lax.scan)
+    reproduces the numpy reference loop exactly -- same clients in the
+    same absorption order, same mediator boundaries, ties included."""
+    rng = np.random.default_rng(seed)
+    counts = _random_counts(rng, k=k, skew=skew)
+    loop = scheduling.reschedule(counts, gamma, impl="loop")
+    bat = scheduling.reschedule(counts, gamma, impl="batched")
+    assert [m.clients for m in loop] == [m.clients for m in bat]
+    for a, b in zip(loop, bat):
+        np.testing.assert_array_equal(a.counts, b.counts)
+
+
+def test_batched_reschedule_duplicate_clients_tie_break():
+    """Identical histograms force score ties at every step: both impls
+    must break them toward the lowest unassigned client id."""
+    counts = np.tile(np.array([[3.0, 1.0, 0.0]]), (7, 1))
+    loop = scheduling.reschedule(counts, gamma=3, impl="loop")
+    bat = scheduling.reschedule(counts, gamma=3, impl="batched")
+    assert [m.clients for m in loop] == [m.clients for m in bat] == \
+        [[0, 1, 2], [3, 4, 5], [6]]
+
+
+def test_reschedule_rejects_unknown_impl():
+    with pytest.raises(ValueError, match="impl"):
+        scheduling.reschedule(np.ones((4, 2)), gamma=2, impl="vectorized")
+
+
 def test_place_mediators_stats_match_bruteforce_recount():
     """The reported local/cross-shard fetch counts must equal a from-
     scratch recount of the placement on a seeded federation schedule."""

@@ -1,0 +1,97 @@
+"""Million-client streaming path, shrunk to CI scale.
+
+The tentpole claim: with a lazy ``StreamingFederation`` feeding the
+host/spilled stores, the per-device footprint is a function of the round
+(``U_cap`` rows), NOT of K -- so K=5e4 (here) and K=1e6 (the committed
+``experiments/results/store.json`` curves) run the same executable over
+the same bytes. Bitwise: the streamed engines reproduce the materialized
+replicated engine exactly, and the spill tier's async prefetch changes
+when rows are read, never the trajectory.
+
+The CI scale-smoke leg runs exactly this file (see ci.yml) under a hard
+job timeout so a scaling regression fails fast instead of hanging."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LocalSpec
+from repro.core.engine import EngineConfig, FLRoundEngine
+from repro.data.synthetic import (SyntheticSpec, StreamingFederation,
+                                  federation_counts)
+from repro.launch.mesh import make_mediator_mesh
+from repro.models.cnn import emnist_cnn
+from repro.optim import adam
+
+SPEC = SyntheticSpec(num_classes=8, image_size=16)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return emnist_cnn(SPEC.num_classes, image_size=16)
+
+
+def _stream(k, seed=5):
+    return StreamingFederation(SPEC, federation_counts(k, SPEC.num_classes,
+                                                       seed=seed),
+                               batch_size=12, seed=seed)
+
+
+def _cfg(store):
+    return EngineConfig.astraea(clients_per_round=8, gamma=4,
+                                local=LocalSpec(12, 1), seed=0,
+                                pad_mediators_to=2, store=store,
+                                reschedule_every_round=True)
+
+
+def _params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_streaming_matches_materialized_bitwise(model):
+    """A small streamed federation == its materialized packed copy,
+    bitwise, under both streaming policies (same padding rule, same
+    per-client bytes, same schedule RNG stream)."""
+    fed = _stream(32, seed=3)
+    mesh = make_mediator_mesh(1)
+    ref = FLRoundEngine(model, adam(1e-3), fed.materialize(),
+                        _cfg("replicated"), mesh=mesh)
+    ref.run_round()
+    ref.run_round()
+    for store in ("host", "spilled"):
+        eng = FLRoundEngine(model, adam(1e-3), fed, _cfg(store), mesh=mesh)
+        eng.run_round()
+        eng.run_round()
+        _params_equal(eng, ref)
+        assert eng.num_round_traces == 1
+
+
+def test_streaming_rejects_non_streaming_policies(model):
+    """Policies that need the packed arrays cannot adopt a row source."""
+    with pytest.raises(ValueError, match="streaming|packed"):
+        FLRoundEngine(model, adam(1e-3), _stream(16), _cfg("replicated"),
+                      mesh=make_mediator_mesh(1))
+
+
+def test_scale_smoke_50k_clients_fixed_footprint(model):
+    """The CI scale leg: K=5e4 completes rounds with a device footprint
+    identical to K=1e3, host == spilled bitwise, one trace, and the
+    spill tier's prefetch overlapped the rounds."""
+    mesh = make_mediator_mesh(1)
+    fed = _stream(50_000)
+    host = FLRoundEngine(model, adam(1e-3), fed, _cfg("host"), mesh=mesh)
+    sp = FLRoundEngine(model, adam(1e-3), fed, _cfg("spilled"), mesh=mesh)
+    for _ in range(2):
+        host.run_round()
+        sp.run_round()
+    _params_equal(host, sp)
+    assert host.num_round_traces == 1 and sp.num_round_traces == 1
+    assert sp.store.prefetch_hits >= 1 and sp.store.prefetch_misses == 0
+    # every staged row is accounted to exactly one tier
+    stats = sp.store.stats()
+    assert stats["tier_rows"] + stats["cache_hit_rows"] > 0
+    assert host.comm.store_stream_bytes == sp.comm.store_stream_bytes > 0
+    # footprint is U_cap rows regardless of K
+    small = FLRoundEngine(model, adam(1e-3), _stream(1_000), _cfg("host"),
+                          mesh=mesh)
+    assert small.store.per_device_bytes() == host.store.per_device_bytes()
