@@ -1,0 +1,184 @@
+"""Perf gate: diff fresh benchmark evidence against committed baselines.
+
+``benchmarks/run.py`` writes structured JSON evidence (timings + analytic
+roofline ledger + a ``_meta`` run-environment envelope) per bench. This
+gate compares a freshly produced set against the baselines committed in
+``experiments/results/`` and fails the build on regression:
+
+* time fields (``us``, ``*_us``, ``*_s``) -- ratio check, ``fresh <=
+  tolerance * baseline``. CPU wall clocks are noisy, so the default
+  tolerance is generous (3x); the gate catches order-of-magnitude
+  regressions (a fused kernel silently falling back to a per-leaf or
+  per-step launch pattern), not 10% jitter.
+* analytic fields (``flops``, ``*bytes*``, ``roofline_us``) and counters
+  (``traces``, ``mediators``) -- EXACT. These are deterministic functions
+  of the kernel's launch geometry; any drift means the kernel's cost
+  model or launch pattern changed and the baseline must be consciously
+  regenerated, never silently absorbed.
+* identity strings (``shape``, ``mesh``, ``bound``) -- exact; a changed
+  shape makes the timing comparison meaningless.
+* booleans -- must not flip ``true -> false`` (e.g.
+  ``online_bytes_equal_raw``, ``fixed_device_footprint``).
+* baseline keys missing from the fresh evidence -- hard fail (a bench
+  that silently stopped emitting a row is not a pass).
+
+Before any of that, the ``_meta`` envelopes must agree on ``backend`` and
+``interpret``: interpret-mode wall times are 100-1000x Mosaic, so diffing
+a CPU/interpret run against a TPU baseline (or vice versa) is refused
+outright (exit 2) rather than reported as pass/fail.
+
+  PYTHONPATH=src python -m benchmarks.run --only kernels,agg --results-dir /tmp/perf
+  PYTHONPATH=src python -m benchmarks.gate --fresh /tmp/perf --files kernels,agg
+
+Exit codes: 0 pass, 1 regression, 2 refused/invalid comparison.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
+                                "experiments", "results")
+DEFAULT_FILES = "kernels,agg"
+DEFAULT_TOLERANCE = 3.0
+
+# exact-match numeric fields beyond the *bytes* pattern: analytic cost
+# model outputs and determinism counters
+EXACT_KEYS = {"flops", "roofline_us", "traces", "mediators", "device_count"}
+# exact-match identity strings
+EXACT_STR_KEYS = {"shape", "mesh", "bound"}
+# derived from measured time (already ratio-gated) or environment-noisy
+SKIP_KEYS = {"achieved_frac", "max_abs_diff", "federation_gen_s", "warm_s"}
+
+
+def _is_time_key(key: str) -> bool:
+    return (key == "us" or key.endswith("_us") or key.endswith("_s")
+            or key.startswith("us_per"))
+
+
+def _exactly(a, b) -> bool:
+    return bool(a == b) or (isinstance(a, float) and isinstance(b, float)
+                            and math.isclose(a, b, rel_tol=1e-9))
+
+
+def compare(fresh: dict, baseline: dict, *, tolerance: float = DEFAULT_TOLERANCE,
+            path: str = "") -> list[str]:
+    """All regressions of ``fresh`` vs ``baseline`` (empty list = pass)."""
+    errs = []
+    for key, bv in baseline.items():
+        if key == "_meta" or key in SKIP_KEYS:
+            continue
+        p = f"{path}.{key}" if path else key
+        if key not in fresh:
+            errs.append(f"{p}: present in baseline but missing from fresh "
+                        "evidence (bench stopped emitting it?)")
+            continue
+        fv = fresh[key]
+        if isinstance(bv, dict):
+            if not isinstance(fv, dict):
+                errs.append(f"{p}: baseline is a dict, fresh is "
+                            f"{type(fv).__name__}")
+            else:
+                errs.extend(compare(fv, bv, tolerance=tolerance, path=p))
+        elif isinstance(bv, bool):
+            if bv and not fv:
+                errs.append(f"{p}: invariant flipped true -> false")
+        elif isinstance(bv, str):
+            if key in EXACT_STR_KEYS and fv != bv:
+                errs.append(f"{p}: identity changed {bv!r} -> {fv!r} "
+                            "(regenerate the baseline deliberately)")
+        elif isinstance(bv, (int, float)):
+            if not isinstance(fv, (int, float)) or isinstance(fv, bool):
+                errs.append(f"{p}: baseline numeric, fresh "
+                            f"{type(fv).__name__}")
+            elif key in EXACT_KEYS or "bytes" in key:
+                if not _exactly(float(fv), float(bv)):
+                    errs.append(f"{p}: analytic/exact field changed "
+                                f"{bv} -> {fv} (cost model or launch "
+                                "geometry drift)")
+            elif _is_time_key(key):
+                if bv > 0 and fv > bv * tolerance:
+                    errs.append(f"{p}: time regression {bv:.1f} -> {fv:.1f} "
+                                f"({fv / bv:.2f}x > {tolerance:.2f}x)")
+    return errs
+
+
+def check_meta(fresh: dict, baseline: dict) -> list[str]:
+    """Refusals: comparisons that would be meaningless, not regressions."""
+    fm, bm = fresh.get("_meta"), baseline.get("_meta")
+    if not isinstance(fm, dict) or not isinstance(bm, dict):
+        return ["missing _meta envelope (regenerate both sides with "
+                "benchmarks.run)"]
+    errs = []
+    for key in ("backend", "interpret"):
+        if fm.get(key) != bm.get(key):
+            errs.append(f"_meta.{key}: baseline={bm.get(key)!r} vs "
+                        f"fresh={fm.get(key)!r} -- refusing to diff "
+                        "interpret-mode numbers against Mosaic (or across "
+                        "backends); regenerate the baseline on this "
+                        "backend instead")
+    return errs
+
+
+def gate_file(fresh_path: str, baseline_path: str, *,
+              tolerance: float = DEFAULT_TOLERANCE
+              ) -> tuple[list[str], list[str]]:
+    """Returns (refusals, regressions) for one evidence file pair."""
+    if not os.path.exists(baseline_path):
+        return ([f"baseline {baseline_path} not found (commit one with "
+                 "benchmarks.run)"], [])
+    if not os.path.exists(fresh_path):
+        return ([f"fresh evidence {fresh_path} not found (did the bench "
+                 "run?)"], [])
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    refusals = check_meta(fresh, baseline)
+    if refusals:
+        return (refusals, [])
+    return ([], compare(fresh, baseline, tolerance=tolerance))
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", required=True,
+                    help="directory holding the freshly generated JSONs")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline directory "
+                         "(default: experiments/results)")
+    ap.add_argument("--files", default=DEFAULT_FILES,
+                    help=f"comma-separated evidence names "
+                         f"(default: {DEFAULT_FILES})")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="max fresh/baseline wall-time ratio "
+                         f"(default: {DEFAULT_TOLERANCE})")
+    args = ap.parse_args(argv)
+
+    any_refused, any_regressed = False, False
+    for name in args.files.split(","):
+        name = name.strip()
+        refusals, regressions = gate_file(
+            os.path.join(args.fresh, f"{name}.json"),
+            os.path.join(args.baseline, f"{name}.json"),
+            tolerance=args.tolerance)
+        for r in refusals:
+            print(f"REFUSED {name}: {r}")
+            any_refused = True
+        for r in regressions:
+            print(f"FAIL {name}: {r}")
+            any_regressed = True
+        if not refusals and not regressions:
+            print(f"OK {name}")
+    if any_refused:
+        return 2
+    if any_regressed:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

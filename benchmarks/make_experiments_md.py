@@ -30,7 +30,9 @@ def _results(name):
     p = os.path.join(ROOT, "experiments", "results", f"{name}.json")
     if os.path.exists(p):
         with open(p) as f:
-            return json.load(f)
+            r = json.load(f)
+        r.pop("_meta", None)        # run-env envelope (for the perf gate)
+        return r
     return None
 
 

@@ -29,7 +29,27 @@ def _emit(name, us, derived):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
-def _save(name, obj):
+def _meta(**overrides):
+    """Run-environment envelope embedded in every result JSON (``_meta``).
+
+    The perf gate (benchmarks/gate.py) refuses to diff numbers produced
+    under a different backend or interpret setting -- interpret-mode wall
+    times are 100-1000x Mosaic and would otherwise read as regressions.
+    """
+    import jax
+    meta = {
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+    }
+    meta.update(overrides)
+    return meta
+
+
+def _save(name, obj, meta=None):
+    obj = dict(obj)
+    obj["_meta"] = meta if meta is not None else _meta()
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
         json.dump(obj, f, indent=2, default=float)
@@ -521,6 +541,9 @@ def bench_agg(scale: E.Scale):
     only single-device microbenchmarks."""
     import subprocess
     import sys
+    import jax
+    from repro.kernels import fedavg_agg as _fa
+    from repro.roofline import kernel_roofline, achieved_fraction
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("XLA_FLAGS", None)
@@ -529,13 +552,27 @@ def bench_agg(scale: E.Scale):
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
     line = next(l for l in proc.stdout.splitlines() if l.startswith("JSON:"))
     results = json.loads(line[len("JSON:"):])
+    interp = jax.default_backend() != "tpu"
+    n_total = 4 * (1 << 14)               # 4 leaves x 16384 f32, fused
     for name, row in results.items():
+        cost = _fa.cost_estimate(row["mediators"], n_total, 4, 4)
+        roof = kernel_roofline(cost.flops, cost.bytes_accessed)
+        row.update({
+            "flops": float(cost.flops),
+            "bytes": float(cost.bytes_accessed),
+            "roofline_us": roof["roofline_s"] * 1e6,
+            "bound": roof["bound"],
+            "achieved_frac": achieved_fraction(row["kernel_us"] * 1e-6,
+                                               roof["roofline_s"]),
+            "interpret": interp,
+        })
         _emit(f"agg/{name}/kernel", row["kernel_us"],
               f"weighted_avg_us={row['weighted_avg_us']:.1f};"
               f"speedup={row['weighted_avg_us'] / row['kernel_us']:.2f}x;"
-              f"max_abs_diff={row['max_abs_diff']:.2e} "
-              f"(interpret mode on CPU; kernel targets TPU Mosaic)")
-    _save("agg", results)
+              f"max_abs_diff={row['max_abs_diff']:.2e};"
+              f"roofline_us={row['roofline_us']:.3f};"
+              f"achieved={row['achieved_frac']:.1e};interpret={interp}")
+    _save("agg", results, meta=_meta(device_count=4))
 
 
 # ----------------------------------------------------------------------
@@ -801,10 +838,26 @@ def bench_store(scale: E.Scale):
 # ----------------------------------------------------------------------
 
 def bench_kernels(scale: E.Scale):
+    """Per-kernel wall time + the analytic roofline ledger.
+
+    Every Pallas kernel that carries a ``pl.CostEstimate`` gets its
+    analytic FLOPs/bytes, the v5e roofline bound (``roofline_us``, which
+    wall it sits against) and the achieved fraction recorded next to the
+    measured time in ``kernels.json``. On this CPU container the kernels
+    run in interpret mode, so ``achieved_frac`` is honest-but-tiny -- the
+    ``interpret`` tag (per row AND in ``_meta``) is what stops the perf
+    gate from ever comparing those numbers against Mosaic baselines.
+    """
     import jax
     import jax.numpy as jnp
+    from repro.core import scheduling
     from repro.kernels import ops, ref
+    from repro.kernels import fedavg_agg as _fa
+    from repro.kernels import kld_score as _kl
+    from repro.roofline import kernel_roofline, achieved_fraction
     key = jax.random.PRNGKey(0)
+    interp = jax.default_backend() != "tpu"
+    out = {}
 
     def timeit(fn, *args, n=5):
         jax.block_until_ready(fn(*args))
@@ -813,23 +866,64 @@ def bench_kernels(scale: E.Scale):
             jax.block_until_ready(fn(*args))
         return (time.time() - t0) / n * 1e6
 
-    d = jax.random.normal(key, (8, 1 << 16), jnp.float32)
-    w = jnp.arange(1.0, 9.0)
+    def record(name, us, ref_us, shape, cost=None):
+        row = {"us": us, "shape": shape, "interpret": interp}
+        derived = f"shape={shape}"
+        if ref_us is not None:
+            row["ref_us"] = ref_us
+            derived = f"ref_us={ref_us:.1f};" + derived
+        if cost is not None:
+            roof = kernel_roofline(cost.flops, cost.bytes_accessed)
+            row.update({
+                "flops": float(cost.flops),
+                "bytes": float(cost.bytes_accessed),
+                "roofline_us": roof["roofline_s"] * 1e6,
+                "bound": roof["bound"],
+                "achieved_frac": achieved_fraction(us * 1e-6,
+                                                   roof["roofline_s"]),
+            })
+            derived += (f";roofline_us={row['roofline_us']:.3f};"
+                        f"bound={row['bound']};"
+                        f"achieved={row['achieved_frac']:.1e};"
+                        f"interpret={interp}")
+        out[name] = row
+        _emit(f"kernels/{name}", us, derived)
+
+    m, n = 8, 1 << 16
+    d = jax.random.normal(key, (m, n), jnp.float32)
+    w = jnp.arange(1.0, m + 1.0)
     us_k = timeit(lambda a, b: ops.fedavg_agg(a, b), d, w)
     us_r = timeit(lambda a, b: ref.fedavg_agg(a, b), d, w)
-    _emit("kernels/fedavg_agg", us_k, f"ref_us={us_r:.1f};n=8x65536")
+    record("fedavg_agg", us_k, us_r, f"{m}x{n}",
+           _fa.cost_estimate(m, n, 4, 4))
 
-    med = jax.random.uniform(key, (47,)) * 100
-    cli = jax.random.uniform(key, (512, 47)) * 50
+    kk, c = 512, 47
+    med = jax.random.uniform(key, (c,)) * 100
+    cli = jax.random.uniform(key, (kk, c)) * 50
     us_k = timeit(lambda a, b: ops.kld_score(a, b), med, cli)
     us_r = timeit(lambda a, b: ref.kld_score(a, b), med, cli)
-    _emit("kernels/kld_score", us_k, f"ref_us={us_r:.1f};n=512x47")
+    record("kld_score", us_k, us_r, f"{kk}x{c}", _kl.score_cost(1, kk, c))
+
+    mm = 16
+    meds = jax.random.uniform(key, (mm, c)) * 100
+    us_k = timeit(lambda a, b: ops.kld_score_matrix(a, b), meds, cli)
+    us_r = timeit(lambda a, b: ref.kld_score_matrix(a, b), meds, cli)
+    record("kld_score_matrix", us_k, us_r, f"{mm}x{kk}x{c}",
+           _kl.score_cost(mm, kk, c))
+
+    # the one-launch Alg. 3 pass vs the XLA lax.scan it replaces
+    gk, gamma = 128, 8
+    counts = jnp.floor(jax.random.uniform(key, (gk, c)) * 20)
+    us_k = timeit(lambda a: ops.kld_greedy_picks(a, gamma), counts)
+    us_r = timeit(lambda a: scheduling._greedy_picks(a, gamma), counts)
+    record("kld_greedy_picks", us_k, us_r, f"K{gk}xC{c}g{gamma}",
+           _kl.greedy_cost(gk, c))
 
     q = jax.random.normal(key, (1, 512, 4, 64))
     k2 = jax.random.normal(key, (1, 512, 2, 64))
     v2 = jax.random.normal(key, (1, 512, 2, 64))
     us_k = timeit(lambda a, b, c: ops.flash_attention(a, b, c), q, k2, v2)
-    _emit("kernels/flash_attention", us_k, "interpret-mode;s=512,h=4,d=64")
+    record("flash_attention", us_k, None, "s512h4d64")
 
     b, nc, L, h, p, n = 2, 8, 64, 4, 64, 32
     ks = jax.random.split(key, 5)
@@ -840,7 +934,8 @@ def bench_kernels(scale: E.Scale):
     Cm = jax.random.normal(ks[4], (b, nc, L, n)) * 0.5
     us_k = timeit(lambda *a: ops.ssd_chunk(*a)[0], x, dt, A, Bm, Cm)
     us_r = timeit(lambda *a: ref.ssd_chunk(*a)[0], x, dt, A, Bm, Cm)
-    _emit("kernels/ssd_chunk", us_k, f"ref_us={us_r:.1f};b2xc8xL64xh4")
+    record("ssd_chunk", us_k, us_r, "b2xc8xL64xh4")
+    _save("kernels", out)
 
 
 # ----------------------------------------------------------------------
@@ -883,8 +978,15 @@ def main() -> None:
     ap.add_argument("--store", default="replicated,sharded,host",
                     help="comma-separated ClientStore policies for the "
                          "engine benchmark (replicated,sharded,host)")
+    ap.add_argument("--results-dir", default=None,
+                    help="write result JSONs here instead of "
+                         "experiments/results (CI: fresh evidence for "
+                         "benchmarks/gate.py to diff against baselines)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
+    if args.results_dir:
+        global RESULTS_DIR
+        RESULTS_DIR = args.results_dir
     scale = E.FULL if args.full else E.DEFAULT
     names = args.only.split(",") if args.only else list(ALL)
     benches = dict(ALL)

@@ -292,6 +292,11 @@ class EngineConfig:
     # reference elsewhere; only consulted when the engine holds an aug plan
     warp_impl: str = "auto"
     use_kernel_agg: bool = False
+    # route Alg. 3 rescheduling through the one-launch Pallas greedy pass
+    # (kernels.kld_greedy_picks) instead of the XLA masked-argmin scan;
+    # identical mediator lists (property-tested), O(1) kernel launches per
+    # pass -- the Mosaic path for 1e5+-client reschedules on TPU
+    reschedule_kernel: bool = False
     reschedule_every_round: bool = False
     donate_params: bool = True
     # floor for the padded mediator count (rounded up to the mesh size);
@@ -599,7 +604,8 @@ class FLRoundEngine:
     def _groups_for(self, sel: np.ndarray) -> list[list[int]]:
         cfg = self.cfg
         if cfg.schedule == "kld":
-            meds = scheduling.reschedule(self._counts[sel], cfg.gamma)
+            meds = scheduling.reschedule(self._counts[sel], cfg.gamma,
+                                         use_kernel=cfg.reschedule_kernel)
             self.last_schedule_stats = scheduling.schedule_stats(meds)
             return [[int(sel[i]) for i in m.clients] for m in meds]
         if cfg.schedule == "random":

@@ -13,15 +13,22 @@ Two implementations, identical mediator lists:
   reschedule. The historical per-step dispatch (one
   ``merged_kld_scores`` call + host argmin per absorbed client) cost
   O(K) roundtrips — O(K^2) score work issued from the interpreter — and
-  stalled Alg. 3 for minutes at K=1e5.
+  stalled Alg. 3 for minutes at K=1e5. With ``use_kernel=True`` the
+  whole pass instead runs as ONE Pallas launch
+  (``kernels.kld_greedy_picks``): the masked-argmin sweep, pick commit,
+  histogram fold and gamma-reset all live in kernel scratch, so a
+  scheduling pass issues O(1) ``pallas_call``s instead of the historical
+  O(M·gamma) per-step kernel dispatches.
 * ``impl="loop"`` — the numpy greedy loop (exact Alg. 3 as in the paper;
-  kept as the equivalence oracle, and as the path that can score through
-  the Pallas ``kld_score`` kernel via ``use_kernel=True``).
+  kept as the equivalence oracle, and as the path that drives the Pallas
+  ``kld_score`` kernel one launch per greedy step via
+  ``use_kernel=True`` — the historical O(M·gamma)-launch pattern).
 
-The two tie-break identically: the loop's ``argmin`` returns the first
+All paths tie-break identically: the loop's ``argmin`` returns the first
 minimum over the unassigned list, which stays in ascending client order;
-the masked argmin returns the lowest client id among the minima. Scores
-match bitwise because both cast counts to f32 before scoring and label
+the masked argmin (scan and kernel alike) returns the lowest client id
+among the minima. Scores match bitwise because every path casts counts
+to f32 and replays the same ``merged_kld_scores`` op sequence, and label
 counts are integer-valued (< 2^24), where f32 accumulation is exact.
 
 We also provide ``random_schedule`` (the FedAvg-style control: clients
@@ -94,11 +101,13 @@ def reschedule(client_counts: np.ndarray, gamma: int, *,
       client_counts: ``(K, C)`` per-client label histograms (the only thing
         clients share -- never samples).
       gamma: max clients per mediator.
-      use_kernel: score through the Pallas ``kld_score`` kernel (implies
-        the loop implementation, which drives the kernel per step).
-      impl: ``"batched"`` (device-resident scan, one roundtrip),
-        ``"loop"`` (numpy greedy oracle), or ``"auto"`` (batched unless
-        ``use_kernel``). Both produce identical mediator lists.
+      use_kernel: run the scoring through Pallas. Under ``"batched"`` the
+        ENTIRE pass is one ``kld_greedy_picks`` launch; under ``"loop"``
+        the numpy loop drives one ``kld_score`` launch per greedy step
+        (the historical O(M·gamma)-launch pattern, kept as an oracle).
+      impl: ``"batched"`` (device-resident; one executable dispatch per
+        reschedule), ``"loop"`` (numpy greedy oracle), or ``"auto"``
+        (batched). All produce identical mediator lists.
 
     Returns:
       List of ``Mediator``; every client appears in exactly one.
@@ -106,12 +115,18 @@ def reschedule(client_counts: np.ndarray, gamma: int, *,
     if impl not in ("auto", "batched", "loop"):
         raise ValueError(f"unknown reschedule impl {impl!r}")
     if impl == "auto":
-        impl = "loop" if use_kernel else "batched"
+        impl = "batched"
     client_counts = np.asarray(client_counts, np.float64)
     num_clients, num_classes = client_counts.shape
+    if num_clients == 0:
+        return []
     if impl == "batched":
-        picks = np.asarray(_greedy_picks(
-            jnp.asarray(client_counts, jnp.float32), int(gamma)))
+        counts_f32 = jnp.asarray(client_counts, jnp.float32)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            picks = np.asarray(kops.kld_greedy_picks(counts_f32, int(gamma)))
+        else:
+            picks = np.asarray(_greedy_picks(counts_f32, int(gamma)))
         return [Mediator(clients=[int(c) for c in picks[s:s + gamma]],
                          counts=client_counts[picks[s:s + gamma]].sum(0))
                 for s in range(0, num_clients, gamma)]

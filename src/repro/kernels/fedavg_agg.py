@@ -3,13 +3,27 @@
 The FL server reduces M mediator parameter-delta shards into one update:
 ``out = sum_m (w_m / sum w) * deltas[m]``. For |w| in the hundreds of GB
 this is the server-side hot loop; fusing normalize+scale+accumulate and
-streaming (M, block_n) tiles through VMEM keeps it HBM-bandwidth-bound
-(its roofline) with zero extra passes.
+streaming (BLOCK_M, BLOCK_N) tiles through VMEM keeps it HBM-bandwidth
+bound (its roofline) with zero extra passes over the deltas.
 
-Tiling: grid over the flattened parameter axis; each step loads an
-(M, BLOCK_N) tile (bf16/f32), multiplies by the fp32 normalized weights
-held in VMEM, accumulates in fp32, writes the BLOCK_N output tile.
-BLOCK_N is 128-aligned for lane efficiency; M rides the sublane axis.
+Tiling (the Mosaic path): a 2-D grid over (128-aligned param blocks x
+mediator blocks). The param axis is ``parallel`` -- independent output
+columns, free to split over cores -- while the mediator axis is
+``arbitrary``: grid-minor, executed sequentially per param block, with the
+partial weighted sums held in an fp32 VMEM accumulator scratch that is
+zeroed at the first mediator block and flushed to the (possibly bf16)
+output tile at the last. Deltas may be bf16 on the wire; every multiply
+and accumulate happens in fp32 ((1, BLOCK_M) x (BLOCK_M, BLOCK_N) dots
+with ``preferred_element_type=f32``, targeting the MXU), so a bf16 tree
+costs half the HBM traffic at fp32 accumulation precision.
+
+The kernel carries a ``pl.CostEstimate`` (2*M*N FLOPs against one
+delta-read + one out-write of HBM traffic -- arithmetic intensity ~1
+FLOP/byte at fp32, firmly under the TPU ridge point, i.e. memory bound)
+so the scheduler never mistakes it for compute-heavy work; the bench
+harness feeds the same analytic numbers through
+``roofline.kernel_roofline`` and records bound + achieved fraction in
+``experiments/results/kernels.json``.
 """
 from __future__ import annotations
 
@@ -18,38 +32,74 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_N = 2048
+DEFAULT_BLOCK_M = 8
 
 
-def _kernel(w_ref, d_ref, o_ref):
-    w = w_ref[...].astype(jnp.float32)                  # (M,)
-    tile = d_ref[...].astype(jnp.float32)               # (M, BLOCK_N)
-    acc = jnp.einsum("m,mn->n", w, tile,
-                     preferred_element_type=jnp.float32)
-    o_ref[...] = acc.astype(o_ref.dtype)
+def _kernel(w_ref, d_ref, o_ref, acc_ref):
+    j = pl.program_id(1)                        # mediator block (grid-minor)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32)          # (1, BLOCK_M) normalized
+    tile = d_ref[...].astype(jnp.float32)       # (BLOCK_M, BLOCK_N)
+    acc_ref[...] += jnp.dot(w, tile, preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def cost_estimate(m: int, n: int, delta_bytes: int, out_bytes: int
+                  ) -> pl.CostEstimate:
+    """Analytic cost of one aggregation launch (also the roofline terms)."""
+    return pl.CostEstimate(
+        flops=2 * m * n,
+        transcendentals=0,
+        bytes_accessed=m * n * delta_bytes + n * out_bytes + m * 4,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
 def fedavg_agg(deltas: jax.Array, weights: jax.Array, *,
-               block_n: int = DEFAULT_BLOCK_N, interpret: bool = True) -> jax.Array:
-    """deltas: (M, N); weights: (M,) raw sizes n_m. Returns (N,)."""
+               block_m: int = DEFAULT_BLOCK_M,
+               block_n: int = DEFAULT_BLOCK_N,
+               interpret: bool = True) -> jax.Array:
+    """deltas: (M, N); weights: (M,) raw sizes n_m. Returns (N,).
+
+    Normalization happens here (weights enter the kernel already summing
+    to 1), so zero-weight padding rows are exact no-ops and callers may
+    pass raw Eq. 6 sample counts -- uniform or not.
+    """
     m, n = deltas.shape
     wn = weights.astype(jnp.float32)
     wn = wn / jnp.maximum(jnp.sum(wn), 1e-12)
-    pad = (-n) % block_n
-    if pad:
-        deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
-    np_ = deltas.shape[1]
+    bm = min(block_m, m) if m else 1
+    pad_m = (-m) % bm
+    pad_n = (-n) % block_n
+    if pad_m or pad_n:
+        deltas = jnp.pad(deltas, ((0, pad_m), (0, pad_n)))
+    if pad_m:
+        wn = jnp.pad(wn, (0, pad_m))
+    mp, np_ = deltas.shape
     out = pl.pallas_call(
         _kernel,
-        grid=(np_ // block_n,),
+        grid=(np_ // block_n, mp // bm),
         in_specs=[
-            pl.BlockSpec((m,), lambda i: (0,)),                  # weights: whole
-            pl.BlockSpec((m, block_n), lambda i: (0, i)),        # delta tile
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),       # weight chunk
+            pl.BlockSpec((bm, block_n), lambda i, j: (j, i)),  # delta tile
         ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((np_,), deltas.dtype),
+        out_specs=pl.BlockSpec((1, block_n), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), deltas.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_n), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        cost_estimate=cost_estimate(mp, np_, deltas.dtype.itemsize,
+                                    deltas.dtype.itemsize),
         interpret=interpret,
-    )(wn, deltas)
-    return out[:n]
+    )(wn[None, :], deltas)
+    return out[0, :n]

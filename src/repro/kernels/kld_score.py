@@ -1,12 +1,34 @@
-"""Pallas TPU kernel: batched KLD-to-uniform scoring (paper Alg. 3 line 7).
+"""Pallas TPU kernels for the Alg. 3 KLD rescheduling sweep (paper line 7).
 
-The greedy rescheduler evaluates, for one mediator histogram P_m and every
-unassigned client histogram P_k, ``D_KL(normalize(P_m + P_k) || U)``. With
-K clients and C classes this is a (K, C) sweep repeated O(c^2) times per
-scheduling pass; the kernel fuses merge + normalize + xlogx + reduce in one
-VMEM pass over (BLOCK_K, C) tiles.
+The greedy rescheduler evaluates, for a mediator histogram P_m and every
+unassigned client histogram P_k, ``D_KL(normalize(P_m + P_k) || U)``.
+Three entry points, from primitive to fully fused:
 
-D_KL(p || U) = sum_i p_i * (log p_i + log C); 0*log0 := 0.
+* ``kld_score``      -- one mediator vs (K, C) candidates -> (K,). The
+  historical per-step sweep; one launch per greedy step when driven from
+  ``scheduling.reschedule(impl="loop", use_kernel=True)``.
+* ``kld_score_matrix`` -- the full (M, K, C) mediator x client sweep in
+  ONE launch -> (M, K). Grid tiles (BLOCK_M mediators x BLOCK_K clients);
+  each step materializes the (BLOCK_M, BLOCK_K, C) merged histograms in
+  VMEM and reduces over C. Replaces the O(M) per-mediator launches when
+  scoring many open mediators at once (diagnostics, placement sweeps).
+* ``kld_greedy_picks`` -- the ENTIRE Alg. 3 scheduling pass in one
+  launch. Grid = (K absorption steps x K/BLOCK_K candidate blocks), both
+  ``arbitrary`` (sequential); VMEM scratch carries the open mediator's
+  histogram, the picked-client mask (as a 0/+inf additive score mask) and
+  the running (min, argmin, winning row); SMEM carries the fill counter.
+  Each step sweeps every candidate block, combines block argmins with
+  strict-< (first-minimum tie-break, the numpy loop's semantics), emits
+  the picked client id, folds its histogram into the mediator and resets
+  it every ``gamma`` picks. O(1) ``pallas_call``s per scheduling pass vs
+  the historical O(M*gamma) -- this is what lets rescheduling scale past
+  1e5 clients without a host roundtrip per absorbed client.
+
+Score arithmetic is an op-for-op replica of
+``distribution.merged_kld_scores`` in f32 (same adds, same normalize, same
+``log(max(p, eps)) - log(max(q, eps))`` ratio, same masked row-sum), so
+picks are bitwise-comparable against the numpy loop oracle -- property-
+tested, ties included, in tests/test_scheduling.py.
 """
 from __future__ import annotations
 
@@ -14,20 +36,44 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_K = 256
+DEFAULT_BLOCK_M = 8
+
+_EPS = 1e-12
 
 
-def _kernel(m_ref, c_ref, o_ref, *, log_c: float):
+def _score_rows(med: jax.Array, cli: jax.Array) -> jax.Array:
+    """D_KL(normalize(med + cli_k) || U) per row; exact replica of
+    ``distribution.merged_kld_scores`` (f32, same op order)."""
+    c = cli.shape[-1]
+    merged = med + cli                                   # (..., C)
+    total = jnp.sum(merged, axis=-1, keepdims=True)
+    p = merged / jnp.maximum(total, _EPS)
+    q = jnp.full((c,), 1.0 / c, jnp.float32)
+    ratio = jnp.log(jnp.maximum(p, _EPS)) - jnp.log(jnp.maximum(q, _EPS))
+    return jnp.sum(jnp.where(p > 0, p * ratio, 0.0), axis=-1)
+
+
+def score_cost(m: int, k: int, c: int) -> pl.CostEstimate:
+    """Analytic cost of an (M, K, C) scoring sweep (one fused launch)."""
+    return pl.CostEstimate(
+        flops=6 * m * k * c,              # add, sum, div, mul, select, reduce
+        transcendentals=m * k * c,        # log per merged bin
+        bytes_accessed=(m * c + k * c) * 4 + m * k * 4,
+    )
+
+
+# ----------------------------------------------------------------------
+# kld_score: one mediator row, (K, C) candidates -> (K,)
+# ----------------------------------------------------------------------
+
+def _score_kernel(m_ref, c_ref, o_ref):
     med = m_ref[...].astype(jnp.float32)                # (1, C)
     cli = c_ref[...].astype(jnp.float32)                # (BLOCK_K, C)
-    merged = med + cli
-    total = jnp.maximum(jnp.sum(merged, axis=-1, keepdims=True), 1e-12)
-    p = merged / total
-    terms = jnp.where(p > 0, p * (jnp.log(jnp.maximum(p, 1e-12)) + log_c), 0.0)
-    o_ref[...] = jnp.sum(terms, axis=-1)
+    o_ref[...] = _score_rows(med, cli)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -40,7 +86,7 @@ def kld_score(mediator_counts: jax.Array, client_counts: jax.Array, *,
         client_counts = jnp.pad(client_counts, ((0, pad), (0, 0)))
     kp = client_counts.shape[0]
     out = pl.pallas_call(
-        functools.partial(_kernel, log_c=float(np.log(c))),
+        _score_kernel,
         grid=(kp // block_k,),
         in_specs=[
             pl.BlockSpec((1, c), lambda i: (0, 0)),
@@ -48,6 +94,157 @@ def kld_score(mediator_counts: jax.Array, client_counts: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((block_k,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((kp,), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
+        cost_estimate=score_cost(1, kp, c),
         interpret=interpret,
     )(mediator_counts[None, :], client_counts)
     return out[:k]
+
+
+# ----------------------------------------------------------------------
+# kld_score_matrix: full (M, K, C) sweep in one launch -> (M, K)
+# ----------------------------------------------------------------------
+
+def _matrix_kernel(m_ref, c_ref, o_ref):
+    med = m_ref[...].astype(jnp.float32)                # (BLOCK_M, C)
+    cli = c_ref[...].astype(jnp.float32)                # (BLOCK_K, C)
+    o_ref[...] = _score_rows(med[:, None, :], cli[None, :, :])
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def kld_score_matrix(mediator_counts: jax.Array, client_counts: jax.Array, *,
+                     block_m: int = DEFAULT_BLOCK_M,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = True) -> jax.Array:
+    """mediator_counts: (M, C); client_counts: (K, C). Returns (M, K) fp32.
+
+    One launch over the whole mediator x client histogram matrix -- the
+    fused replacement for M independent ``kld_score`` launches.
+    """
+    m, c = mediator_counts.shape
+    k, _ = client_counts.shape
+    bm = min(block_m, max(m, 1))
+    bk = min(block_k, max(k, 1))
+    pad_m = (-m) % bm
+    pad_k = (-k) % bk
+    if pad_m:
+        mediator_counts = jnp.pad(mediator_counts, ((0, pad_m), (0, 0)))
+    if pad_k:
+        client_counts = jnp.pad(client_counts, ((0, pad_k), (0, 0)))
+    mp, kp = mediator_counts.shape[0], client_counts.shape[0]
+    out = pl.pallas_call(
+        _matrix_kernel,
+        grid=(mp // bm, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, c), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, kp), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        cost_estimate=score_cost(mp, kp, c),
+        interpret=interpret,
+    )(mediator_counts, client_counts)
+    return out[:m, :k]
+
+
+# ----------------------------------------------------------------------
+# kld_greedy_picks: the whole Alg. 3 pass in one launch -> (K,) picks
+# ----------------------------------------------------------------------
+
+def _greedy_kernel(c_ref, o_ref, mask_ref, med_ref, hist_ref, fill_ref,
+                   best_ref, bidx_ref, *, k, gamma, block_k):
+    s, b = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _():                         # first step: build the additive score
+        base = b * block_k           # mask -- 0 for live rows, +inf for
+        mask_ref[pl.ds(base, block_k)] = jnp.where(     # padding rows
+            base + jax.lax.iota(jnp.int32, block_k) < k, 0.0, jnp.inf)
+
+        @pl.when(b == 0)
+        def _():                     # scratch is NOT zero-initialized
+            med_ref[...] = jnp.zeros_like(med_ref)
+            fill_ref[0] = 0
+
+    @pl.when(b == 0)
+    def _():                         # new absorption step: reset the
+        best_ref[0] = jnp.inf        # running argmin, and open a fresh
+        bidx_ref[0] = 0              # mediator once the last one filled
+
+        @pl.when(fill_ref[0] == gamma)
+        def _():
+            med_ref[...] = jnp.zeros_like(med_ref)
+            fill_ref[0] = 0
+
+    cli = c_ref[...]                                     # (BLOCK_K, C) f32
+    scores = _score_rows(med_ref[0, :][None, :], cli)
+    masked = scores + mask_ref[pl.ds(b * block_k, block_k)]
+    bmin = jnp.min(masked)
+    barg = jnp.argmin(masked).astype(jnp.int32)          # first minimum
+
+    @pl.when(bmin < best_ref[0])     # strict <: earlier blocks win ties,
+    def _():                         # matching the loop's first-minimum
+        best_ref[0] = bmin
+        bidx_ref[0] = b * block_k + barg
+        hist_ref[...] = jax.nn.one_hot(barg, block_k, dtype=jnp.float32
+                                       )[None, :] @ cli
+
+    @pl.when(b == pl.num_programs(1) - 1)
+    def _():                         # sweep done: commit the pick
+        pick = bidx_ref[0]
+        o_ref[0] = pick
+        mask_ref[pl.ds(pick, 1)] = jnp.full((1,), jnp.inf)
+        med_ref[...] += hist_ref[...]
+        fill_ref[0] += 1
+
+
+def greedy_cost(k: int, c: int) -> pl.CostEstimate:
+    """K absorption steps, each a full (K, C) scoring sweep."""
+    sweep = score_cost(1, k, c)
+    return pl.CostEstimate(
+        flops=k * sweep.flops + 4 * k * k,   # + mask/min/argmin combines
+        transcendentals=k * sweep.transcendentals,
+        bytes_accessed=k * k * c * 4 + k * 4,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "block_k", "interpret"))
+def kld_greedy_picks(client_counts: jax.Array, gamma: int, *,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = True) -> jax.Array:
+    """One-launch Alg. 3: client_counts (K, C) -> (K,) int32 picks.
+
+    Returns the absorption order: mediator ``i`` holds clients
+    ``picks[i*gamma : (i+1)*gamma]``. Bitwise-identical to the numpy
+    greedy loop (``scheduling.reschedule(impl="loop")``), ties included.
+    The (K, C) histogram matrix stays tiled in HBM; per-step VMEM
+    residency is one (BLOCK_K, C) tile plus the (K,) pick mask.
+    """
+    kk, c = client_counts.shape
+    bk = min(block_k, max(kk, 1))
+    pad = (-kk) % bk
+    if pad:
+        client_counts = jnp.pad(client_counts, ((0, pad), (0, 0)))
+    kp = client_counts.shape[0]
+    return pl.pallas_call(
+        functools.partial(_greedy_kernel, k=kk, gamma=gamma, block_k=bk),
+        grid=(kk, kp // bk),
+        in_specs=[pl.BlockSpec((bk, c), lambda s, b: (b, 0))],
+        out_specs=pl.BlockSpec((1,), lambda s, b: (s,)),
+        out_shape=jax.ShapeDtypeStruct((kk,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((kp,), jnp.float32),     # pick mask (0 / +inf)
+            pltpu.VMEM((1, c), jnp.float32),    # open mediator histogram
+            pltpu.VMEM((1, c), jnp.float32),    # winning candidate row
+            pltpu.SMEM((1,), jnp.int32),        # mediator fill counter
+            pltpu.SMEM((1,), jnp.float32),      # running min score
+            pltpu.SMEM((1,), jnp.int32),        # running argmin
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        cost_estimate=greedy_cost(kk, c),
+        interpret=interpret,
+    )(client_counts.astype(jnp.float32))

@@ -39,21 +39,21 @@ def fedavg_agg_tree(deltas_tree: PyTree, weights: jax.Array, *,
                     fuse: bool | None = None, **kw) -> PyTree:
     """Apply Eq. 6 to a stacked (M, ...) parameter pytree.
 
-    ``fuse=True`` flattens every leaf into one ``(M, total_params)`` buffer
-    and runs a single kernel launch over it -- one grid, one pass over HBM,
-    no per-leaf ragged tails (ROADMAP "kernel aggregation at scale"). Each
-    column is reduced independently, so the result is bitwise identical to
-    the per-leaf path on a uniform-dtype tree. Default: fused on real TPUs,
-    per-leaf in interpret mode (CPU), where the fused python-loop grid over
-    the concatenated buffer is slower than XLA's per-leaf fusion. A
-    mixed-dtype tree auto-falls back to per-leaf (concatenation would
-    promote and change the reduction dtype); an explicit ``fuse=True``
-    overrides that and accepts the promotion.
+    ``fuse=True`` (the default) flattens the leaves into one
+    ``(M, total_params)`` buffer per dtype and runs a single kernel launch
+    over each -- one grid, one pass over HBM, no per-leaf ragged tails
+    (ROADMAP "kernel aggregation at scale"). Each column is reduced
+    independently with the same (BLOCK_M) accumulation chunking, so the
+    result is bitwise identical to the per-leaf path; grouping by dtype
+    keeps every leaf's reduction in its own wire dtype (a bf16/f32 mixed
+    tree costs two launches, never a promotion). Normalization happens
+    inside ``fedavg_agg``, so non-uniform Eq. 6 weights take the fused
+    path exactly like uniform ones. ``fuse=False`` keeps the historical
+    one-launch-per-leaf path (the equivalence oracle).
     """
     kw.setdefault("interpret", _interpret())
     if fuse is None:
-        uniform = len({l.dtype for l in jax.tree.leaves(deltas_tree)}) <= 1
-        fuse = uniform and not kw["interpret"]
+        fuse = True
     if not fuse:
         def leaf(d):
             m = d.shape[0]
@@ -62,13 +62,19 @@ def fedavg_agg_tree(deltas_tree: PyTree, weights: jax.Array, *,
         return jax.tree.map(leaf, deltas_tree)
     leaves, treedef = jax.tree.flatten(deltas_tree)
     m = leaves[0].shape[0]
-    sizes = [int(np.prod(l.shape[1:])) for l in leaves]
-    flat = jnp.concatenate([l.reshape(m, -1) for l in leaves], axis=1)
-    agg = fedavg_agg(flat, weights, **kw)               # (total_params,)
-    outs, start = [], 0
-    for l, size in zip(leaves, sizes):
-        outs.append(agg[start:start + size].reshape(l.shape[1:]).astype(l.dtype))
-        start += size
+    by_dtype: dict[Any, list[int]] = {}
+    for i, l in enumerate(leaves):
+        by_dtype.setdefault(l.dtype, []).append(i)
+    outs: list[Any] = [None] * len(leaves)
+    for dt, idxs in by_dtype.items():
+        flat = jnp.concatenate([leaves[i].reshape(m, -1) for i in idxs],
+                               axis=1)
+        agg = fedavg_agg(flat, weights, **kw)           # (group_params,)
+        start = 0
+        for i in idxs:
+            size = int(np.prod(leaves[i].shape[1:]))
+            outs[i] = agg[start:start + size].reshape(leaves[i].shape[1:])
+            start += size
     return jax.tree.unflatten(treedef, outs)
 
 
@@ -81,8 +87,24 @@ def affine_warp(images: jax.Array, mats: jax.Array, trans: jax.Array,
 
 
 def kld_score(mediator_counts: jax.Array, client_counts: jax.Array, **kw) -> jax.Array:
+    """One mediator (C,) vs candidates (K, C) -> (K,) Alg. 3 scores."""
     kw.setdefault("interpret", _interpret())
     return _kl.kld_score(mediator_counts, client_counts, **kw)
+
+
+def kld_score_matrix(mediator_counts: jax.Array, client_counts: jax.Array,
+                     **kw) -> jax.Array:
+    """Fused (M, K, C) sweep: mediators (M, C) x clients (K, C) -> (M, K)
+    scores in ONE launch (vs M per-mediator ``kld_score`` launches)."""
+    kw.setdefault("interpret", _interpret())
+    return _kl.kld_score_matrix(mediator_counts, client_counts, **kw)
+
+
+def kld_greedy_picks(client_counts: jax.Array, gamma: int, **kw) -> jax.Array:
+    """The whole Alg. 3 scheduling pass in one launch: (K, C) histograms
+    -> (K,) absorption order, bitwise-identical to the greedy loop."""
+    kw.setdefault("interpret", _interpret())
+    return _kl.kld_greedy_picks(client_counts, gamma, **kw)
 
 
 def ssd_chunk(x, dt, A, B, C, **kw):

@@ -50,6 +50,12 @@ def kld_score(mediator_counts: Array, client_counts: Array) -> Array:
     return terms.sum(-1)
 
 
+def kld_score_matrix(mediator_counts: Array, client_counts: Array) -> Array:
+    """(M, C) mediators x (K, C) clients -> (M, K) Alg. 3 scores."""
+    return jax.vmap(lambda m: kld_score(m, client_counts))(
+        mediator_counts.astype(jnp.float32))
+
+
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                     window: int | None = None, q_offset: int = 0) -> Array:
     """Reference attention. q,k,v: (b, h, s, d) (kernel layout). fp32 softmax."""

@@ -1,6 +1,8 @@
-from repro.roofline.hlo import parse_hlo_costs, HloCosts
+from repro.roofline.hlo import parse_hlo_costs, compiled_costs, HloCosts
 from repro.roofline.model import (RooflineTerms, roofline_from_costs, HW,
-                                  analytic_flops_per_token, model_flops)
+                                  analytic_flops_per_token, model_flops,
+                                  kernel_roofline, achieved_fraction)
 
-__all__ = ["parse_hlo_costs", "HloCosts", "RooflineTerms", "roofline_from_costs",
-           "HW", "analytic_flops_per_token", "model_flops"]
+__all__ = ["parse_hlo_costs", "compiled_costs", "HloCosts", "RooflineTerms",
+           "roofline_from_costs", "HW", "analytic_flops_per_token",
+           "model_flops", "kernel_roofline", "achieved_fraction"]

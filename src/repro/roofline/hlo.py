@@ -313,3 +313,18 @@ def parse_hlo_costs(text: str) -> HloCosts:
     costs.collective_count = cc
     costs.collective_by_kind = kinds
     return costs
+
+
+def compiled_costs(fn, *args, **kwargs) -> HloCosts:
+    """Jit-compile ``fn(*args, **kwargs)`` and parse its optimized HLO.
+
+    The cross-check path for the kernels' analytic ``CostEstimate``s: run
+    the XLA *reference* implementation (e.g. ``kernels.ref.fedavg_agg``)
+    through this and compare its bytes/FLOPs against the analytic model --
+    if the reference program moves fewer bytes than the kernel claims, the
+    claim is wrong. Numbers are per-device, post-optimization.
+    """
+    import jax
+
+    compiled = jax.jit(fn).lower(*args, **kwargs).compile()
+    return parse_hlo_costs(compiled.as_text())

@@ -71,6 +71,39 @@ def roofline_from_costs(flops: float, bytes_accessed: float,
     )
 
 
+def kernel_roofline(flops: float, bytes_accessed: float,
+                    hw: HW = HW()) -> dict:
+    """Two-term (compute/HBM) roofline bound for a single kernel launch.
+
+    Takes the kernel's ANALYTIC cost (the same flops/bytes the Pallas
+    ``CostEstimate`` advertises to the compiler -- ``kernels.fedavg_agg.
+    cost_estimate``, ``kernels.kld_score.score_cost`` / ``greedy_cost``)
+    and returns the no-overlap lower bound on wall time plus which wall
+    the kernel sits against. ``intensity`` vs ``ridge_intensity``
+    (peak_flops / hbm_bw, FLOP/byte) says how far from the ridge point.
+    """
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_accessed / hw.hbm_bw
+    return {
+        "flops": float(flops),
+        "bytes": float(bytes_accessed),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "roofline_s": max(compute_s, memory_s),
+        "bound": "compute" if compute_s >= memory_s else "memory",
+        "intensity": float(flops) / max(float(bytes_accessed), 1.0),
+        "ridge_intensity": hw.peak_flops / hw.hbm_bw,
+    }
+
+
+def achieved_fraction(measured_s: float, roofline_s: float) -> float:
+    """Fraction of the roofline bound achieved: bound / measured, in [0, 1]
+    on real hardware. Interpret-mode runs report tiny fractions -- the
+    bench JSON tags those with ``interpret: true`` so the perf gate never
+    reads an interpret fraction as a Mosaic regression."""
+    return float(roofline_s) / max(float(measured_s), 1e-12)
+
+
 def model_flops(cfg: ArchConfig, tokens: int, kind: str) -> float:
     """6*N*D useful-FLOPs reference for ``tokens`` processed tokens.
 

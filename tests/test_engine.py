@@ -196,6 +196,22 @@ def test_engine_kernel_agg_path_matches_jnp(model, tiny_federation):
         lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-5))
 
 
+def test_engine_reschedule_kernel_bitwise(model, tiny_federation):
+    """(d'') reschedule_kernel routes Alg. 3 through the one-launch Pallas
+    greedy pass; the schedule is bitwise-identical to the XLA scan path,
+    so the whole trajectory must be too (not just allclose)."""
+    mk = lambda rk: FLRoundEngine(
+        model, adam(1e-3), tiny_federation,
+        EngineConfig.astraea(clients_per_round=6, gamma=3,
+                             local=LocalSpec(10, 1), reschedule_kernel=rk,
+                             seed=0))
+    a, b = mk(False), mk(True)
+    for _ in range(2):
+        a.run_round()
+        b.run_round()
+    _leaves_equal(a.params, b.params, np.testing.assert_array_equal)
+
+
 _MULTI_DEVICE_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

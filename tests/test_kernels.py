@@ -76,6 +76,45 @@ def test_fedavg_agg_tree_shapes(key):
         np.testing.assert_allclose(np.asarray(o), np.asarray(e), rtol=1e-5)
 
 
+def test_fedavg_agg_m1_and_unaligned_n():
+    """M=1 (single mediator) and N off the 128/BLOCK_N grid: the padding
+    rows/columns introduced by the 2-D tiling must be exact no-ops."""
+    for m, n in ((1, 130), (1, 2049), (5, 1000)):
+        key = jax.random.PRNGKey(m * 7919 + n)
+        d = jax.random.normal(key, (m, n), jnp.float32)
+        w = jax.random.uniform(jax.random.fold_in(key, 1), (m,)) + 0.1
+        out = ops.fedavg_agg(d, w)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.fedavg_agg(d, w)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_agg_block_m_chunking(key):
+    """M spanning several BLOCK_M chunks: the sequential VMEM-accumulator
+    reduction over mediator blocks matches the single-chunk launch and
+    the einsum oracle."""
+    d = jax.random.normal(key, (17, 300), jnp.float32)
+    w = jnp.arange(1.0, 18.0)
+    expect = np.asarray(ref.fedavg_agg(d, w))
+    for block_m in (4, 8, 32):
+        out = np.asarray(ops.fedavg_agg(d, w, block_m=block_m))
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_agg_bf16_fp32_accumulation(key):
+    """bf16 deltas: output stays bf16 (wire dtype) but every product and
+    partial sum is fp32 -- the result must track the fp32 oracle computed
+    on the same (bf16-rounded) values to bf16 round-off, not bf16
+    accumulation error."""
+    d16 = jax.random.normal(key, (9, 257), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (9,)) * 5 + 0.1
+    out = ops.fedavg_agg(d16, w)
+    assert out.dtype == jnp.bfloat16
+    full = np.asarray(ref.fedavg_agg(d16.astype(jnp.float32), w))
+    np.testing.assert_allclose(np.asarray(out, np.float32), full,
+                               rtol=2e-2, atol=2e-2)
+
+
 def test_fedavg_agg_tree_fused_matches_per_leaf(key):
     """The single flattened (M, total_params) launch == the per-leaf path,
     bitwise: each column reduces independently, fusion only changes tiling."""
@@ -89,6 +128,22 @@ def test_fedavg_agg_tree_fused_matches_per_leaf(key):
     for o, e in zip(jax.tree.leaves(fused), jax.tree.leaves(per_leaf)):
         assert o.shape == e.shape and o.dtype == e.dtype
         np.testing.assert_array_equal(np.asarray(o), np.asarray(e))
+
+
+def test_fedavg_agg_tree_mixed_dtypes_bitwise(key):
+    """A bf16/f32 mixed tree fuses into one launch PER DTYPE GROUP; every
+    leaf keeps its wire dtype and matches the per-leaf path bitwise."""
+    tree = {"f32a": jax.random.normal(key, (4, 130)),
+            "bf16": jax.random.normal(jax.random.fold_in(key, 1),
+                                      (4, 96)).astype(jnp.bfloat16),
+            "f32b": jax.random.normal(jax.random.fold_in(key, 2), (4, 7, 5))}
+    w = jnp.asarray([2.0, 1.0, 0.0, 4.5])
+    fused = ops.fedavg_agg_tree(tree, w, fuse=True, block_n=128)
+    per_leaf = ops.fedavg_agg_tree(tree, w, fuse=False, block_n=128)
+    for o, e in zip(jax.tree.leaves(fused), jax.tree.leaves(per_leaf)):
+        assert o.dtype == e.dtype
+        np.testing.assert_array_equal(np.asarray(o, np.float32),
+                                      np.asarray(e, np.float32))
 
 
 @given(k=st.integers(1, 300), c=st.integers(2, 64))
@@ -109,6 +164,60 @@ def test_kld_score_zero_rows():
     cli = jnp.zeros((5, 4))
     out = np.asarray(ops.kld_score(med, cli))
     assert np.isfinite(out).all()
+
+
+@given(m=st.integers(1, 20), k=st.integers(1, 100), c=st.integers(2, 32))
+@settings(max_examples=15, deadline=None)
+def test_kld_score_matrix_matches_ref(m, k, c):
+    """The one-launch (M, K, C) sweep == the vmapped per-mediator oracle,
+    and each row == the per-mediator kernel bitwise (same f32 ops)."""
+    key = jax.random.PRNGKey(m * 10000 + k * 100 + c)
+    meds = jax.random.uniform(key, (m, c)) * 100
+    cli = jax.random.uniform(jax.random.fold_in(key, 1), (k, c)) * 50
+    out = ops.kld_score_matrix(meds, cli)
+    assert out.shape == (m, k)
+    expect = ref.kld_score_matrix(meds, cli)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+    row = ops.kld_score(meds[0], cli)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(row))
+
+
+def test_kld_score_matrix_zero_histograms():
+    """Zero-histogram clients AND mediators (padding rows / an empty open
+    mediator) must score finite -- the masked p>0 row-sum handles p=0."""
+    meds = jnp.concatenate([jnp.zeros((1, 5)),
+                            jnp.ones((2, 5)) * 3.0])
+    cli = jnp.concatenate([jnp.zeros((2, 5)),
+                           jnp.ones((3, 5)) * 2.0])
+    out = np.asarray(ops.kld_score_matrix(meds, cli))
+    assert out.shape == (3, 5) and np.isfinite(out).all()
+    # all-zero merged histogram scores exactly 0 (the empty sum)
+    assert out[0, 0] == 0.0
+
+
+@given(seed=st.integers(0, 100), k=st.integers(1, 24), c=st.integers(2, 8),
+       gamma=st.integers(1, 5), block_k=st.sampled_from([4, 256]))
+@settings(max_examples=12, deadline=None)
+def test_kld_greedy_picks_matches_scan(seed, k, c, gamma, block_k):
+    """The one-launch Alg. 3 kernel == the jitted masked-argmin lax.scan,
+    bitwise, across block sizes (cross-block strict-< tie combining) and
+    integer histograms (heavy ties)."""
+    from repro.core import scheduling
+    rng = np.random.default_rng(seed)
+    counts = jnp.asarray(rng.integers(0, 30, (k, c)), jnp.float32)
+    picks = np.asarray(ops.kld_greedy_picks(counts, gamma, block_k=block_k))
+    expect = np.asarray(scheduling._greedy_picks(counts, gamma))
+    np.testing.assert_array_equal(picks, expect)
+
+
+def test_kld_greedy_picks_all_ties_ascending():
+    """Identical histograms tie at every step; the first-minimum rule
+    (within-block argmin + strict-< cross-block combine) must yield
+    ascending client ids, including across BLOCK_K boundaries."""
+    counts = jnp.tile(jnp.asarray([[2.0, 1.0, 0.0]]), (9, 1))
+    picks = np.asarray(ops.kld_greedy_picks(counts, 4, block_k=4))
+    np.testing.assert_array_equal(picks, np.arange(9))
 
 
 @pytest.mark.parametrize("s,heads,kv,hd", [(128, 4, 4, 64), (256, 4, 2, 64),

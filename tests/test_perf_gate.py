@@ -1,0 +1,153 @@
+"""benchmarks/gate.py: the evidence-diffing perf gate.
+
+The gate is itself gated here: it must pass on untouched evidence, fail
+(exit 1) on injected time/byte regressions, refuse (exit 2) to compare
+across interpret/Mosaic or backend boundaries, and fail when a bench row
+silently disappears. The committed experiments/results baselines are
+checked for self-consistency (gate(x, x) == pass) so a malformed baseline
+can never make the CI job vacuous.
+"""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks import gate
+
+BASELINES = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "results")
+
+EVIDENCE = {
+    "fedavg_agg": {"us": 100.0, "ref_us": 50.0, "shape": "8x65536",
+                   "interpret": True, "flops": 1048576.0, "bytes": 2359328.0,
+                   "roofline_us": 2.88, "bound": "memory",
+                   "achieved_frac": 2.9e-5},
+    "nested": {"inner": {"kernel_us": 10.0, "store_bytes": 4096,
+                         "traces": 1, "ok": True}},
+    "_meta": {"backend": "cpu", "interpret": True, "device_count": 1,
+              "jax_version": "0.4.37"},
+}
+
+
+def _pair(tmp_path, mutate=None):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir(exist_ok=True), fresh.mkdir(exist_ok=True)
+    (base / "kernels.json").write_text(json.dumps(EVIDENCE))
+    ev = copy.deepcopy(EVIDENCE)
+    if mutate:
+        mutate(ev)
+    (fresh / "kernels.json").write_text(json.dumps(ev))
+    return str(fresh), str(base)
+
+
+def _run(tmp_path, mutate=None, tolerance=3.0):
+    fresh, base = _pair(tmp_path, mutate)
+    return gate.main(["--fresh", fresh, "--baseline", base,
+                      "--files", "kernels", "--tolerance", str(tolerance)])
+
+
+def test_gate_passes_on_identical_evidence(tmp_path):
+    assert _run(tmp_path) == 0
+
+
+def test_gate_passes_within_time_tolerance(tmp_path):
+    def faster_and_slightly_slower(ev):
+        ev["fedavg_agg"]["us"] = 250.0          # 2.5x < 3x tolerance
+        ev["nested"]["inner"]["kernel_us"] = 1.0  # faster is always fine
+    assert _run(tmp_path, faster_and_slightly_slower) == 0
+
+
+def test_gate_fails_on_time_regression(tmp_path):
+    def slow(ev):
+        ev["nested"]["inner"]["kernel_us"] = 31.0   # 3.1x > 3x
+    assert _run(tmp_path, slow) == 1
+
+
+def test_gate_fails_on_byte_or_analytic_drift(tmp_path):
+    for field, value in (("bytes", 2359329.0), ("flops", 1.0),
+                         ("roofline_us", 5.0), ("shape", "8x128"),
+                         ("bound", "compute")):
+        def drift(ev, f=field, v=value):
+            ev["fedavg_agg"][f] = v
+        assert _run(tmp_path, drift) == 1, field
+
+
+def test_gate_fails_on_nested_exact_fields(tmp_path):
+    def drift(ev):
+        ev["nested"]["inner"]["store_bytes"] = 8192
+    assert _run(tmp_path, drift) == 1
+    def traces(ev):
+        ev["nested"]["inner"]["traces"] = 2
+    assert _run(tmp_path, traces) == 1
+
+
+def test_gate_fails_on_boolean_flip_and_missing_row(tmp_path):
+    def flip(ev):
+        ev["nested"]["inner"]["ok"] = False
+    assert _run(tmp_path, flip) == 1
+    def vanish(ev):
+        del ev["fedavg_agg"]
+    assert _run(tmp_path, vanish) == 1
+
+
+def test_gate_ignores_derived_and_extra_fields(tmp_path):
+    def noise(ev):
+        ev["fedavg_agg"]["achieved_frac"] = 0.9    # derived from time
+        ev["fedavg_agg"]["ref_us"] = 140.0         # within tolerance
+        ev["brand_new_row"] = {"us": 1.0}          # additions are fine
+    assert _run(tmp_path, noise) == 0
+
+
+def test_gate_refuses_interpret_vs_mosaic(tmp_path):
+    def mosaic(ev):
+        ev["_meta"] = {"backend": "tpu", "interpret": False,
+                       "device_count": 4, "jax_version": "0.4.37"}
+        ev["fedavg_agg"]["us"] = 0.5
+    assert _run(tmp_path, mosaic) == 2
+
+
+def test_gate_refuses_missing_meta(tmp_path):
+    def strip(ev):
+        del ev["_meta"]
+    assert _run(tmp_path, strip) == 2
+
+
+def test_gate_refuses_missing_files(tmp_path):
+    fresh, base = _pair(tmp_path)
+    assert gate.main(["--fresh", fresh, "--baseline", base,
+                      "--files", "kernels,absent"]) == 2
+
+
+def test_committed_baselines_self_consistent():
+    """gate(baseline, baseline) must pass for every committed evidence
+    file the CI job diffs -- otherwise the perf-gate job is vacuous."""
+    for name in gate.DEFAULT_FILES.split(","):
+        path = os.path.join(BASELINES, f"{name}.json")
+        assert os.path.exists(path), f"missing committed baseline {name}"
+        refusals, regressions = gate.gate_file(path, path)
+        assert refusals == [] and regressions == [], name
+    with open(os.path.join(BASELINES, "kernels.json")) as f:
+        kernels = json.load(f)
+    # the roofline evidence fields the ISSUE promises are actually there
+    row = kernels["fedavg_agg"]
+    for field in ("us", "flops", "bytes", "roofline_us", "achieved_frac",
+                  "bound", "interpret"):
+        assert field in row, field
+    assert kernels["_meta"]["backend"]
+    assert "interpret" in kernels["_meta"]
+
+
+def test_gate_detects_perturbed_committed_baseline(tmp_path):
+    """End-to-end against the REAL committed kernels baseline: a 10x
+    slowdown and a one-byte analytic drift must both fail the gate."""
+    with open(os.path.join(BASELINES, "kernels.json")) as f:
+        ev = json.load(f)
+    ev["fedavg_agg"]["us"] *= 10
+    ev["kld_greedy_picks"]["bytes"] += 1
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    (fresh / "kernels.json").write_text(json.dumps(ev))
+    assert gate.main(["--fresh", str(fresh), "--baseline", BASELINES,
+                      "--files", "kernels"]) == 1

@@ -94,6 +94,37 @@ def test_batched_reschedule_duplicate_clients_tie_break():
         [[0, 1, 2], [3, 4, 5], [6]]
 
 
+@given(st.integers(0, 150), st.integers(2, 16), st.integers(1, 4),
+       st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_kernel_batched_reschedule_matches_loop(seed, k, gamma, skew):
+    """impl="batched" + use_kernel=True (the ONE-launch Pallas greedy
+    pass) == the numpy loop oracle: same clients, same absorption order,
+    same mediator histograms, ties included."""
+    rng = np.random.default_rng(seed)
+    counts = _random_counts(rng, k=k, skew=skew)
+    loop = scheduling.reschedule(counts, gamma, impl="loop")
+    ker = scheduling.reschedule(counts, gamma, impl="batched",
+                                use_kernel=True)
+    assert [m.clients for m in loop] == [m.clients for m in ker]
+    for a, b in zip(loop, ker):
+        np.testing.assert_array_equal(a.counts, b.counts)
+
+
+def test_kernel_reschedule_duplicate_clients_tie_break():
+    """All-ties federation through the kernel path: first-minimum order."""
+    counts = np.tile(np.array([[3.0, 1.0, 0.0]]), (7, 1))
+    ker = scheduling.reschedule(counts, gamma=3, impl="batched",
+                                use_kernel=True)
+    assert [m.clients for m in ker] == [[0, 1, 2], [3, 4, 5], [6]]
+
+
+def test_reschedule_empty_federation():
+    for use_kernel in (False, True):
+        assert scheduling.reschedule(np.zeros((0, 4)), gamma=2,
+                                     use_kernel=use_kernel) == []
+
+
 def test_reschedule_rejects_unknown_impl():
     with pytest.raises(ValueError, match="impl"):
         scheduling.reschedule(np.ones((4, 2)), gamma=2, impl="vectorized")
