@@ -4,8 +4,15 @@
   experiments/dryrun_opt/   optimized dry-run JSONs (post §Perf changes)
   experiments/perf/         hillclimb iteration JSONs
   experiments/results/      FL benchmark JSONs (paper tables/figures)
+  experiments/trace/        obs.Telemetry artifacts (per-round metrics.jsonl
+                            + events.jsonl, from --trace-dir runs or
+                            benchmarks.telemetry_smoke)
 
   PYTHONPATH=src python -m benchmarks.make_experiments_md > EXPERIMENTS.md
+
+As a side effect the telemetry section is also written standalone to
+``experiments/README.md`` -- the per-round observability digest (bytes/
+round timeline, staleness histogram) next to the raw artifacts it renders.
 """
 from __future__ import annotations
 
@@ -61,6 +68,95 @@ def dryrun_table(recs, mesh):
 
 def fmt(v, nd=4):
     return f"{v:.{nd}f}" if isinstance(v, (int, float)) and v is not None else str(v)
+
+
+# ----------------------------------------------------------------------
+# Telemetry digest: per-round metrics from obs.Telemetry artifacts
+# ----------------------------------------------------------------------
+
+def _load_metrics_rows(arm_dir):
+    p = os.path.join(arm_dir, "metrics.jsonl")
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def _staleness_bars(hist):
+    """De-cumulate a Prometheus-style ``le_*`` histogram sample into
+    per-bucket counts with ASCII bars."""
+    bounds = sorted((k for k in hist if k.startswith("le_") and
+                     k != "le_inf"), key=lambda k: float(k[3:]))
+    lines, prev = [], 0
+    total = hist.get("count", 0) or 1
+    for k in bounds + ["le_inf"]:
+        n = hist[k] - prev
+        prev = hist[k]
+        label = "+Inf" if k == "le_inf" else k[3:]
+        bar = "#" * round(24 * n / total)
+        lines.append(f"    s <= {label:>4}  {n:>6}  {bar}")
+    return lines
+
+
+def telemetry_md():
+    """Markdown digest of ``experiments/trace/<arm>/metrics.jsonl``:
+    the WAN bytes/round timeline and the commit-staleness histogram."""
+    trace_root = os.path.join(ROOT, "experiments", "trace")
+    arms = sorted(d for d in glob.glob(os.path.join(trace_root, "*"))
+                  if os.path.isdir(d))
+    out = ["## §Telemetry — per-round observability digest", "",
+           "Rendered from `experiments/trace/<arm>/metrics.jsonl` "
+           "(`obs.Telemetry` artifacts; regenerate with "
+           "`PYTHONPATH=src python -m benchmarks.telemetry_smoke "
+           "--out experiments/trace` or any bench run under "
+           "`--trace-dir`). Counters are cumulative ledgers mirrored "
+           "exactly (`astraea_wan_bytes_total` **is** "
+           "`CommMeter.total_bytes`); the span timeline for each arm "
+           "lives next door in `events.jsonl` / `trace.json` "
+           "(Perfetto-loadable).", ""]
+    if not arms:
+        out.append("*(no trace artifacts found -- run the smoke tool "
+                   "above to populate this section)*")
+        return "\n".join(out)
+    for arm_dir in arms:
+        rows = _load_metrics_rows(arm_dir)
+        if not rows:
+            continue
+        arm = os.path.basename(arm_dir)
+        out += [f"### {arm}", "",
+                "| round | WAN bytes (cum) | Δ bytes | intra-pod bytes "
+                "| traces | commits |",
+                "|---|---|---|---|---|---|"]
+        prev_wan = 0
+        for r in rows:
+            wan = r.get("astraea_wan_bytes_total", 0)
+            out.append(
+                f"| {r['round']} | {int(wan):,} | {int(wan - prev_wan):,} "
+                f"| {int(r.get('astraea_intra_pod_bytes_total', 0)):,} "
+                f"| {int(r.get('astraea_round_traces', 0))} "
+                f"| {int(r.get('astraea_commits_total', 0))} |")
+            prev_wan = wan
+        hist = rows[-1].get("astraea_staleness")
+        if hist and hist.get("count"):
+            out += ["", "Commit staleness distribution (all rounds):", "",
+                    "```"] + _staleness_bars(hist) + ["```"]
+        out.append("")
+    return "\n".join(out)
+
+
+def write_experiments_readme():
+    path = os.path.join(ROOT, "experiments", "README.md")
+    with open(path, "w") as f:
+        f.write("# experiments/ — run artifacts\n\n"
+                "`results/` holds the FL benchmark JSONs diffed by the CI "
+                "perf gate (`benchmarks/gate.py`); `trace/` holds "
+                "`obs.Telemetry` round-trace artifacts (events.jsonl, "
+                "Perfetto trace.json, metrics.jsonl, metrics.prom). This "
+                "file is generated by `benchmarks.make_experiments_md` -- "
+                "do not edit by hand.\n\n")
+        f.write(telemetry_md())
+        f.write("\n")
+    return path
 
 
 def main():
@@ -228,6 +324,9 @@ axes.""")
               f"| {o['memory']['peak_estimate_gb']:.1f} |")
 
     print(PERF_NARRATIVE)
+    print()
+    print(telemetry_md())
+    write_experiments_readme()
 
 
 PERF_NARRATIVE = r"""

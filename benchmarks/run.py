@@ -23,6 +23,26 @@ from benchmarks import fl_experiments as E
 from benchmarks import roofline as R
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "results")
+TRACE_DIR = None     # --trace-dir: per-bench obs.Telemetry artifact root
+
+
+def _telemetry(tag):
+    """A Telemetry handle writing under ``TRACE_DIR/<tag>``, or None.
+
+    None (the default) keeps every engine on the zero-cost no-op stubs,
+    so benchmark wall times are unchanged unless tracing was requested.
+    """
+    if TRACE_DIR is None:
+        return None
+    from repro.obs import Telemetry
+    return Telemetry(os.path.join(TRACE_DIR, tag))
+
+
+def _flush_telemetry(tel):
+    if tel is not None:
+        paths = tel.flush()
+        _emit(f"trace/{os.path.basename(os.path.dirname(paths['events_jsonl']))}",
+              0.0, f"events={paths['events_jsonl']}")
 
 
 def _emit(name, us, derived):
@@ -311,11 +331,13 @@ def bench_engine(scale: E.Scale, stores: tuple = ("replicated",)):
                         local="random", seed=0, name=f"eng{m_target}")
         store_rows = {}
         for store in stores:
+            tel = _telemetry(f"engine_M{m_target}_{store}")
             eng = FLRoundEngine(
                 model, adam(1e-3), fed,
                 EngineConfig.astraea(clients_per_round=k, gamma=gamma,
                                      local=local, store=store,
-                                     pad_mediators_to=m_target, seed=0))
+                                     pad_mediators_to=m_target, seed=0),
+                telemetry=tel)
             eng.run_round()                  # compile + schedule pack
             jax.block_until_ready(eng.params)
             t0 = time.time()
@@ -323,6 +345,7 @@ def bench_engine(scale: E.Scale, stores: tuple = ("replicated",)):
                 eng.run_round()
             jax.block_until_ready(eng.params)
             us = (time.time() - t0) / reps * 1e6
+            _flush_telemetry(tel)
             store_rows[store] = {
                 "us": us, "store_bytes": eng.store.per_device_bytes(),
                 "traces": eng.num_round_traces}
@@ -620,7 +643,8 @@ def bench_async(scale: E.Scale):
     sync_sim_time = None        # the S=0 arm's barrier clock (same fleet)
 
     for s_bound in (0, 1, 2):
-        eng = FLRoundEngine(model, adam(1e-3), fed, cfg)
+        tel = _telemetry(f"async_S{s_bound}")
+        eng = FLRoundEngine(model, adam(1e-3), fed, cfg, telemetry=tel)
         a = AsyncRoundEngine(eng, AsyncSpec(staleness_bound=s_bound,
                                             wave_size=1,
                                             straggler=straggler))
@@ -653,6 +677,7 @@ def bench_async(scale: E.Scale):
                "commits": h["commits"], "traffic_mb": h["traffic_mb"],
                "traces": eng.num_round_traces}
         out[f"S{s_bound}"] = row
+        _flush_telemetry(tel)
         tta_s = f"{row['tta_speedup']:.2f}x" if tta else "not-reached"
         _emit(f"async/S{s_bound}", us,
               f"round_speedup={row['round_speedup']:.2f}x;"
@@ -852,8 +877,11 @@ def bench_kernels(scale: E.Scale):
     import jax.numpy as jnp
     from repro.core import scheduling
     from repro.kernels import ops, ref
+    from repro.kernels import affine_warp as _aw
     from repro.kernels import fedavg_agg as _fa
+    from repro.kernels import flash_attention as _fla
     from repro.kernels import kld_score as _kl
+    from repro.kernels import ssd_chunk as _sc
     from repro.roofline import kernel_roofline, achieved_fraction
     key = jax.random.PRNGKey(0)
     interp = jax.default_backend() != "tpu"
@@ -919,11 +947,25 @@ def bench_kernels(scale: E.Scale):
     record("kld_greedy_picks", us_k, us_r, f"K{gk}xC{c}g{gamma}",
            _kl.greedy_cost(gk, c))
 
+    # Alg. 2 augmentation primitive -- a mobile-vision batch
+    wb, wh, wc = 32, 28, 1
+    from repro.core.augmentation import warp_params
+    imgs = jax.random.normal(key, (wb, wh, wh, wc), jnp.float32)
+    mats, trans = warp_params(jax.random.fold_in(key, 7), wb)
+    us_k = timeit(lambda a, b2, c2: ops.affine_warp(a, b2, c2),
+                  imgs, mats, trans)
+    us_r = timeit(lambda a, b2, c2: ref.affine_warp(a, b2, c2),
+                  imgs, mats, trans)
+    record("affine_warp", us_k, us_r, f"b{wb}x{wh}x{wh}x{wc}",
+           _aw.cost_estimate(wb, wh, wh, wc, 4))
+
     q = jax.random.normal(key, (1, 512, 4, 64))
     k2 = jax.random.normal(key, (1, 512, 2, 64))
     v2 = jax.random.normal(key, (1, 512, 2, 64))
     us_k = timeit(lambda a, b, c: ops.flash_attention(a, b, c), q, k2, v2)
-    record("flash_attention", us_k, None, "s512h4d64")
+    # ops repeats the 2 GQA kv heads to 4 before the kernel launch
+    record("flash_attention", us_k, None, "s512h4d64",
+           _fla.cost_estimate(1, 4, 512, 512, 64, 4))
 
     b, nc, L, h, p, n = 2, 8, 64, 4, 64, 32
     ks = jax.random.split(key, 5)
@@ -934,7 +976,8 @@ def bench_kernels(scale: E.Scale):
     Cm = jax.random.normal(ks[4], (b, nc, L, n)) * 0.5
     us_k = timeit(lambda *a: ops.ssd_chunk(*a)[0], x, dt, A, Bm, Cm)
     us_r = timeit(lambda *a: ref.ssd_chunk(*a)[0], x, dt, A, Bm, Cm)
-    record("ssd_chunk", us_k, us_r, "b2xc8xL64xh4")
+    record("ssd_chunk", us_k, us_r, "b2xc8xL64xh4",
+           _sc.cost_estimate(b, nc, L, h, p, n))
     _save("kernels", out)
 
 
@@ -982,11 +1025,19 @@ def main() -> None:
                     help="write result JSONs here instead of "
                          "experiments/results (CI: fresh evidence for "
                          "benchmarks/gate.py to diff against baselines)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable obs.Telemetry on the engine benchmarks and "
+                         "write span JSONL / trace.json / Prometheus text "
+                         "per bench arm under this directory (default: "
+                         "tracing off, zero-cost no-op stubs)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     if args.results_dir:
         global RESULTS_DIR
         RESULTS_DIR = args.results_dir
+    if args.trace_dir:
+        global TRACE_DIR
+        TRACE_DIR = args.trace_dir
     scale = E.FULL if args.full else E.DEFAULT
     names = args.only.split(",") if args.only else list(ALL)
     benches = dict(ALL)

@@ -76,6 +76,9 @@ class AstraeaTrainer:
     # (launch/mesh.py:make_fl_mesh). None = 1-D mediator mesh (or the
     # ASTRAEA_MODEL_PARALLEL env default). Ignored when ``mesh`` is given.
     model_parallel: int | None = None
+    # optional obs.Telemetry handle threaded into the engine (host-side
+    # spans + metrics; None = the zero-cost no-op stubs)
+    telemetry: object = None
     seed: int = 0
     history: list[dict] = field(default_factory=list)
 
@@ -108,7 +111,7 @@ class AstraeaTrainer:
                 pad_mediators_to=pad_m,
                 donate_params=False, seed=self.seed),
             mesh=mesh, aug_plan=engine_plan,
-            adaptive_aug_alpha=adaptive_alpha)
+            adaptive_aug_alpha=adaptive_alpha, telemetry=self.telemetry)
         if phase.mode == "materialized":
             # online mode charges this inside the engine; the materialized
             # phase broadcast the same plan before the engine existed

@@ -169,6 +169,12 @@ class AsyncRoundEngine:
         return self.engine.comm
 
     @property
+    def telemetry(self):
+        """The wrapped engine's observability handle (obs/): one handle
+        per engine, shared by both the sync and async drivers."""
+        return self.engine.telemetry
+
+    @property
     def sim_speedup(self) -> float:
         """Simulated round-time reduction vs the synchronous barrier."""
         return self.sync_time / max(self.virtual_time, 1e-12)
@@ -178,6 +184,19 @@ class AsyncRoundEngine:
     # ------------------------------------------------------------------
     def run_round(self) -> None:
         spec, eng = self.spec, self.engine
+        tel = eng.telemetry
+        wan0 = eng.comm.total_bytes
+        round_span = tel.span("round", round=self._round, mode="async",
+                              staleness_bound=spec.staleness_bound,
+                              wave_size=spec.wave_size,
+                              policy=eng.cfg.store)
+        with round_span as rsp:
+            self._run_round_body(spec, eng, tel)
+            rsp.set(wan_bytes=eng.comm.total_bytes - wan0,
+                    traces=eng.num_round_traces)
+        tel.observe_async_round(self, duration_s=rsp.duration_s)
+
+    def _run_round_body(self, spec, eng, tel) -> None:
         data_args, plan_args, unperm, slot, row_to_group, m_real = \
             eng.ensure_schedule()
         slot_np = np.asarray(slot)
@@ -205,41 +224,50 @@ class AsyncRoundEngine:
         snapshot = eng.params                # dispatch snapshot for round r
         for wi, wave in enumerate(waves):
             rows = np.sort(np.asarray(wave, np.int64))
-            mask = np.zeros((m_pad, 1), np.float32)
-            mask[row_of[rows]] = 1.0
-            wslot = slot * jnp.asarray(mask)    # members bitwise, rest 0
-            stacked, weights = eng.wave_fn(snapshot, data_args, plan_args,
-                                           unperm, wslot, keys,
-                                           *eng.aug_args())
-            rj = jnp.asarray(rows)
-            vals = jax.tree.map(lambda a: a[rj], stacked)
-            wts = weights[rj]
-            if wi == 0:
-                # dummy-row tail (weight exactly 0) completing the padded
-                # stack so an S=0 commit aggregates the byte-identical
-                # input of the synchronous round executable
-                dj = jnp.arange(m_real, m_pad)
-                self._dummy = (jax.tree.map(lambda a: a[dj], stacked),
-                               weights[dj])
-            clients = int(slot_np[row_of[rows]].sum())
-            if self._parallel_clients:
-                eng.comm.fedavg_wave(clients)
-            else:
-                eng.comm.astraea_wave(clients, len(rows),
-                                      eng.cfg.mediator_epochs)
-            if eng._model_size > 1:
-                # every wave execution gathers the model-sharded snapshot
-                # (wave_fn's replicate_params) -- one intra-pod charge per
-                # wave, unlike the WAN ledger where waves only re-partition
-                # a round's fixed byte total
-                eng.comm.model_axis_round(eng._msize * eng._model_size,
-                                          eng._model_size)
-            if eng.store.exchange_bytes_per_round:
-                # each wave runs the full padded-M program, so the sharded
-                # serve exchange rides the interconnect once per wave
-                eng.comm.store_exchange(eng.store.exchange_bytes_per_round)
-            self._pending.append(_PendingWave(
-                r, wi, t0 + wstats["wave_times"][wi], rows, vals, wts))
+            wave_span = tel.span("wave", wave=wi, round=r,
+                                 mediators=int(rows.size),
+                                 sim_done=float(t0 + wstats["wave_times"][wi]))
+            with wave_span as wsp:
+                mask = np.zeros((m_pad, 1), np.float32)
+                mask[row_of[rows]] = 1.0
+                wslot = slot * jnp.asarray(mask)  # members bitwise, rest 0
+                stacked, weights = eng.wave_fn(snapshot, data_args,
+                                               plan_args, unperm, wslot,
+                                               keys, *eng.aug_args())
+                rj = jnp.asarray(rows)
+                vals = jax.tree.map(lambda a: a[rj], stacked)
+                wts = weights[rj]
+                wsp.sync_on((vals, wts))
+                if wi == 0:
+                    # dummy-row tail (weight exactly 0) completing the
+                    # padded stack so an S=0 commit aggregates the byte-
+                    # identical input of the synchronous round executable
+                    dj = jnp.arange(m_real, m_pad)
+                    self._dummy = (jax.tree.map(lambda a: a[dj], stacked),
+                                   weights[dj])
+                clients = int(slot_np[row_of[rows]].sum())
+                wave_wan0 = eng.comm.total_bytes
+                if self._parallel_clients:
+                    eng.comm.fedavg_wave(clients)
+                else:
+                    eng.comm.astraea_wave(clients, len(rows),
+                                          eng.cfg.mediator_epochs)
+                if eng._model_size > 1:
+                    # every wave execution gathers the model-sharded
+                    # snapshot (wave_fn's replicate_params) -- one
+                    # intra-pod charge per wave, unlike the WAN ledger
+                    # where waves only re-partition a round's fixed total
+                    eng.comm.model_axis_round(eng._msize * eng._model_size,
+                                              eng._model_size)
+                if eng.store.exchange_bytes_per_round:
+                    # each wave runs the full padded-M program, so the
+                    # sharded serve exchange rides the interconnect per wave
+                    eng.comm.store_exchange(
+                        eng.store.exchange_bytes_per_round)
+                self._pending.append(_PendingWave(
+                    r, wi, t0 + wstats["wave_times"][wi], rows, vals, wts))
+                wsp.set(clients=clients,
+                        wan_bytes=eng.comm.total_bytes - wave_wan0)
         eng.comm.end_round()
 
         # ---- commit C_r: wait for staleness-expired waves + the round's
@@ -258,6 +286,11 @@ class AsyncRoundEngine:
     def _fold(self, ready: list[_PendingWave], r: int, c_time: float) -> None:
         """One server commit: staleness-discounted Eq. 6 over ``ready``."""
         assert ready, "a commit always folds at least the round's fast wave"
+        with self.telemetry.span("commit", round=r,
+                                 sim_time=float(c_time)) as csp:
+            self._fold_traced(ready, r, c_time, csp)
+
+    def _fold_traced(self, ready, r, c_time, csp) -> None:
         parts_v, parts_w, stales = [], [], []
         for q in sorted({p.round for p in ready}):
             ws = [p for p in ready if p.round == q]
@@ -289,6 +322,10 @@ class AsyncRoundEngine:
             "staleness": stales,
             "pending_after": len(self._pending),
         })
+        csp.set(folded_rows=self.commit_log[-1]["folded_rows"],
+                staleness_max=max(stales) if stales else 0,
+                pending_after=len(self._pending))
+        csp.sync_on(self.engine.params)
 
     def flush(self) -> None:
         """Fold every still-pending straggler wave (end of training).
@@ -302,6 +339,10 @@ class AsyncRoundEngine:
         ready, self._pending = self._pending, []
         self._fold(ready, self._round, c_time)
         self.virtual_time = max(self.virtual_time, c_time)
+        # the flush commit lands after the last round's absorption: emit
+        # one final post-flush metrics snapshot so its staleness
+        # observations reach the registry too
+        self.telemetry.observe_async_round(self)
 
     # ------------------------------------------------------------------
     # driving

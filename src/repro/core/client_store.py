@@ -108,6 +108,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import scheduling
 from repro.launch.mesh import (mediator_sharding, replicated_sharding,
                                ring_permutation)
+from repro.obs.telemetry import NULL_TELEMETRY
 
 Arrays = Any
 
@@ -218,6 +219,9 @@ class ClientStore:
     # places the model parameters (sharded over the ``model`` mesh axis on
     # a 2-D mesh); None until an engine adopts the store
     param_residency: tuple[int, int] | None = None
+    # optional obs.Telemetry handle (the adopting engine installs its own;
+    # the default no-op singleton keeps standalone stores zero-cost)
+    telemetry = NULL_TELEMETRY
 
     def note_param_residency(self, per_device_bytes: int,
                              model_axis: int = 1) -> None:
@@ -240,17 +244,52 @@ class ClientStore:
         raise NotImplementedError
 
     def stats(self) -> dict:
-        """Residency audit row: policy + per-device client bytes
-        (benchmarks and the online-aug byte tests compare this against the
-        raw pack), plus the engine's per-device *param* bytes and model
-        axis once an engine has adopted the store (the 2-D mesh tests
-        assert the model-axis reduction here)."""
-        row = {"policy": self.policy,
-               "per_device_bytes": self.per_device_bytes()}
-        if self.param_residency is not None:
-            row["per_device_param_bytes"], row["model_axis"] = \
-                self.param_residency
-        return row
+        """Residency/traffic audit row with ONE schema for all policies.
+
+        Every policy returns the same key set -- features a policy lacks
+        report ``0`` (counters) or ``None`` (identifiers) -- so the
+        metrics registry and dashboards never branch per policy:
+
+        ======================== ============================== ==========
+        key                      meaning                        inactive
+        ======================== ============================== ==========
+        policy                   placement policy name          --
+        per_device_bytes         resident client bytes/device   --
+        per_device_param_bytes   engine param bytes/device      None
+        model_axis               param model-shard factor       None
+        exchange                 sharded serve exchange mode    None
+        exchange_bytes_per_round serve-exchange bytes/round     0
+        streamed_bytes           cumulative host->device bytes  0
+        num_streams              host->device stream events     0
+        prefetch_hits            background stages consumed     0
+        prefetch_misses          stages discarded (mismatch)    0
+        cache_hit_rows           rows served from the RAM cache 0
+        tier_rows                rows read from the spill tier  0
+        spill_dir                mmap tier directory            None
+        ======================== ============================== ==========
+
+        ``per_device_param_bytes``/``model_axis`` stay ``None`` until an
+        engine adopts the store (the 2-D mesh tests assert the model-axis
+        reduction here); benchmarks and the online-aug byte tests compare
+        ``per_device_bytes`` against the raw pack.
+        """
+        ppb, axis = self.param_residency or (None, None)
+        return {
+            "policy": self.policy,
+            "per_device_bytes": self.per_device_bytes(),
+            "per_device_param_bytes": ppb,
+            "model_axis": axis,
+            "exchange": getattr(self, "exchange", None),
+            "exchange_bytes_per_round": self.exchange_bytes_per_round,
+            "streamed_bytes": getattr(self, "_streamed_bytes", 0),
+            "num_streams": getattr(self, "num_streams", 0),
+            "prefetch_hits": getattr(self, "prefetch_hits", 0),
+            "prefetch_misses": getattr(self, "prefetch_misses", 0),
+            "cache_hit_rows": getattr(self, "cache_hit_rows", 0),
+            "tier_rows": getattr(self, "tier_rows", 0),
+            "spill_dir": getattr(getattr(self, "_src", None),
+                                 "spill_dir", None),
+        }
 
 
 class ReplicatedStore(ClientStore):
@@ -492,11 +531,8 @@ class ShardedStore(ClientStore):
     def per_device_bytes(self) -> int:
         return _bytes(self._x, self._y, self._m) // self._n
 
-    def stats(self) -> dict:
-        row = super().stats()
-        row["exchange"] = self.exchange
-        row["exchange_bytes_per_round"] = self.exchange_bytes_per_round
-        return row
+    # stats(): the unified base-class schema already surfaces
+    # exchange/exchange_bytes_per_round from this class's attributes
 
 
 class HostStore(ClientStore):
@@ -563,11 +599,7 @@ class HostStore(ClientStore):
     def per_device_bytes(self) -> int:
         return self._cap * self._src.nbytes_per_client
 
-    def stats(self) -> dict:
-        row = super().stats()
-        row["streamed_bytes"] = self._streamed_bytes
-        row["num_streams"] = self.num_streams
-        return row
+    # stats(): streamed_bytes/num_streams ride the unified base schema
 
 
 class SpilledHostStore(HostStore):
@@ -656,8 +688,12 @@ class SpilledHostStore(HostStore):
             if "result" in box and np.array_equal(pre_uniq, uniq):
                 bufs, cached, tier = box["result"]
                 self.prefetch_hits += 1
+                self.telemetry.instant("store_prefetch", hit=True,
+                                       rows=int(uniq.size))
             else:
                 self.prefetch_misses += 1
+                self.telemetry.instant("store_prefetch", hit=False,
+                                       rows=int(uniq.size))
         if bufs is None:
             bufs, cached, tier = self._fetch(uniq, self._cache)
         self.cache_hit_rows += cached
@@ -665,42 +701,43 @@ class SpilledHostStore(HostStore):
         self._cache = (uniq, bufs)        # becomes next reschedule's RAM cache
         return bufs
 
-    def stats(self) -> dict:
-        row = super().stats()
-        row.update(prefetch_hits=self.prefetch_hits,
-                   prefetch_misses=self.prefetch_misses,
-                   cache_hit_rows=self.cache_hit_rows,
-                   tier_rows=self.tier_rows)
-        if hasattr(self._src, "spill_dir"):
-            row["spill_dir"] = self._src.spill_dir
-        return row
+    # stats(): prefetch/cache/tier counters and spill_dir ride the
+    # unified base schema
 
 
 def build_client_store(policy: str, xs=None, ys=None, mask=None, mesh=None, *,
                        capacity: int | None = None, exchange: str = "ragged",
-                       spill_dir: str | None = None,
-                       source=None) -> ClientStore:
+                       spill_dir: str | None = None, source=None,
+                       telemetry=None) -> ClientStore:
     """Build the packed client store under ``policy`` (see module docstring).
 
     ``xs/ys/mask`` are the packed host arrays; the streaming policies
     (``host``/``spilled``) alternatively accept ``source``, a row source
     (``PackedClients``/``MmapClients``/``StreamingFederation``-like) that
     is never materialized as one array -- the million-client path.
+    ``telemetry`` optionally installs an ``obs.Telemetry`` handle (the
+    adopting engine overwrites it with its own; default = no-op stubs).
     """
     if source is not None and policy not in ("host", "spilled"):
         raise ValueError(f"client-store policy {policy!r} needs the packed "
                          "arrays; streaming row sources require the 'host' "
                          "or 'spilled' policy")
     if policy == "replicated":
-        return ReplicatedStore(xs, ys, mask, mesh)
-    if policy == "sharded":
-        return ShardedStore(xs, ys, mask, mesh, exchange=exchange)
-    if policy in ("host", "spilled"):
+        store = ReplicatedStore(xs, ys, mask, mesh)
+    elif policy == "sharded":
+        store = ShardedStore(xs, ys, mask, mesh, exchange=exchange)
+    elif policy in ("host", "spilled"):
         if capacity is None:
             capacity = source.num_clients if source is not None else xs.shape[0]
         if policy == "host":
-            return HostStore(xs, ys, mask, mesh, capacity, source=source)
-        return SpilledHostStore(xs, ys, mask, mesh, capacity, source=source,
-                                spill_dir=spill_dir)
-    raise ValueError(f"unknown client-store policy {policy!r}; "
-                     f"expected one of {POLICIES}")
+            store = HostStore(xs, ys, mask, mesh, capacity, source=source)
+        else:
+            store = SpilledHostStore(xs, ys, mask, mesh, capacity,
+                                     source=source, spill_dir=spill_dir)
+    else:
+        raise ValueError(f"unknown client-store policy {policy!r}; "
+                         f"expected one of {POLICIES}")
+    if telemetry is not None:
+        from repro.obs.telemetry import as_telemetry
+        store.telemetry = as_telemetry(telemetry)
+    return store

@@ -151,3 +151,18 @@ class CommMeter:
     def end_round(self) -> None:
         """Snapshot the cumulative WAN bytes at a round boundary."""
         self.round_log.append(self.total_bytes)
+
+    # ---- telemetry export ----
+    def ledger_totals(self) -> dict:
+        """Every cumulative ledger and breakdown, keyed by the suffix the
+        metrics registry publishes it under (``astraea_<key>``).  The obs
+        layer mirrors these with ``Counter.set_total`` so each Prometheus
+        sample equals the ledger value exactly -- keep this the single
+        place that enumerates the meter's cumulative surfaces."""
+        return {
+            "wan_bytes_total": self.total_bytes,
+            "intra_pod_bytes_total": self.intra_pod_bytes,
+            "model_axis_tp_bytes_total": self.model_axis_tp_bytes,
+            "store_stream_bytes_total": self.store_stream_bytes,
+            "store_exchange_bytes_total": self.store_exchange_bytes,
+        }

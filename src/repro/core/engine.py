@@ -182,6 +182,7 @@ from repro.launch.mesh import (default_fl_mesh, model_axis_size,
                                replicated_sharding)
 from repro.launch.sharding import model_only_rules, param_shardings
 from repro.models.cnn import Model, count_params
+from repro.obs.telemetry import as_telemetry
 from repro.optim.optimizers import Optimizer
 
 PyTree = Any
@@ -349,8 +350,13 @@ class FLRoundEngine:
                  cfg: EngineConfig, *, mesh=None,
                  loss_fn: Callable | None = None,
                  aug_plan: np.ndarray | None = None,
-                 adaptive_aug_alpha: float | None = None):
+                 adaptive_aug_alpha: float | None = None,
+                 telemetry=None):
         self.model, self.opt, self.data, self.cfg = model, opt, data, cfg
+        # host-side observability handle (obs/): spans + metrics around --
+        # never inside -- the jitted round, so telemetry on/off is bitwise
+        # identical and adds zero traces (tests/test_telemetry.py)
+        self.telemetry = as_telemetry(telemetry)
         self.mesh = mesh if mesh is not None else default_fl_mesh()
         self._msize = int(self.mesh.shape["mediator"])
         self._model_size = model_axis_size(self.mesh)
@@ -389,6 +395,7 @@ class FLRoundEngine:
                     f"of batch_size {cfg.local.batch_size}")
             self.store = build_client_store(
                 cfg.store, mesh=self.mesh, capacity=capacity, source=data)
+        self.store.telemetry = self.telemetry
         self._raw_counts = data.client_counts()
         self._counts = self._raw_counts
         self._rng = np.random.default_rng(cfg.seed)
@@ -433,6 +440,10 @@ class FLRoundEngine:
         self.last_schedule_stats: dict | None = None
         self.num_schedule_packs = 0             # host packing events (bench)
         self.num_round_traces = 0               # round_fn (re)compilations
+        # one entry per (re)trace with its *reason* -- "initial" for each
+        # entry point's first compile, "retrace" for anything after; the
+        # metrics registry surfaces the retrace count as engine health
+        self.trace_log: list[dict] = []
         self._schedule: tuple | None = None
         self._round = 0
         self._round_fn = self._build_round_fn(loss_fn)
@@ -475,6 +486,17 @@ class FLRoundEngine:
         if self._param_shardings is None:
             return params
         return jax.lax.with_sharding_constraint(params, self._param_shardings)
+
+    def _note_trace(self, fn: str) -> None:
+        """Python side effect inside the jitted bodies: runs at TRACE time
+        only, counting (re)compilations and recording why -- the first
+        trace per entry point is expected ("initial"); anything after is
+        an unexpected "retrace" (a shape/dtype/sharding drift)."""
+        self.num_round_traces += 1
+        first = not any(t["fn"] == fn for t in self.trace_log)
+        self.trace_log.append({"fn": fn, "round": self._round,
+                               "trace_index": self.num_round_traces,
+                               "reason": "initial" if first else "retrace"})
 
     def _build_round_fn(self, loss_fn):
         cfg, store = self.cfg, self.store
@@ -568,7 +590,7 @@ class FLRoundEngine:
             return stacked, weights
 
         def round_fn(params, data, plan, unperm, slot, keys, *aug):
-            self.num_round_traces += 1          # python: counts (re)traces
+            self._note_trace("round_fn")        # python: counts (re)traces
             params = self.replicate_params(params)      # §8: model gather
             stacked, weights = trained_rows(params, data, plan, unperm, slot,
                                             keys, *aug)
@@ -585,7 +607,7 @@ class FLRoundEngine:
             # (exact no-ops, like dummy mediators), so one trace serves
             # every wave of every reschedule. No donation: the dispatch
             # snapshot params are shared by all waves of a round.
-            self.num_round_traces += 1          # python: counts (re)traces
+            self._note_trace("wave_fn")         # python: counts (re)traces
             params = self.replicate_params(params)      # §8: model gather
             return trained_rows(params, data, plan, unperm, slot, keys, *aug)
 
@@ -629,6 +651,7 @@ class FLRoundEngine:
         mediators first, dummies last), which is what keeps every
         placement bit-identical to the replicated path.
         """
+        tel = self.telemetry
         if self._adaptive_alpha is not None:
             # per-round adaptive rebalancing: recompute the Alg. 2 plan
             # from the *selected cohort's* label histograms (the drifted
@@ -636,11 +659,17 @@ class FLRoundEngine:
             # the tiny array to the cohort, and let Alg. 3 below pack by
             # the refreshed expected post-augmentation counts. The plan is
             # a round operand, so no re-trace happens (asserted in tests).
-            plan_np = augmentation.augmentation_plan(
-                self._raw_counts[sel].sum(axis=0), self._adaptive_alpha)
-            self._install_plan(plan_np)
-            self.comm.plan_broadcast(plan_np.size, len(sel))
-        groups = self._groups_for(sel)
+            with tel.span("plan_refresh", cohort=len(sel)):
+                plan_np = augmentation.augmentation_plan(
+                    self._raw_counts[sel].sum(axis=0), self._adaptive_alpha)
+                self._install_plan(plan_np)
+                self.comm.plan_broadcast(plan_np.size, len(sel))
+        with tel.span("reschedule", cohort=len(sel),
+                      schedule=self.cfg.schedule) as rsp:
+            groups = self._groups_for(sel)
+            if self.last_schedule_stats:
+                rsp.set(kld_mean=self.last_schedule_stats.get("kld_mean"),
+                        num_mediators=len(groups))
         m_real = len(groups)
         m_pad = self.cfg.pad_mediators_to or m_real
         if m_pad < m_real:
@@ -648,27 +677,42 @@ class FLRoundEngine:
                 f"pad_mediators_to={m_pad} smaller than the schedule "
                 f"({m_real} mediators)")
         m_pad = _pad_multiple(m_pad, self._msize)
-        row_to_group = self.store.place(groups, m_pad)
-        idx = np.zeros((m_pad, self.cfg.gamma), np.int32)
-        slot = np.zeros((m_pad, self.cfg.gamma), np.float32)
-        row_of = np.zeros(m_real, np.int64)
-        for r, g in enumerate(row_to_group):
-            if g < 0:
-                continue
-            row_of[g] = r
-            for ci, cid in enumerate(groups[g]):
-                idx[r, ci] = cid
-                slot[r, ci] = 1.0
-        dummy_rows = np.flatnonzero(row_to_group < 0)
-        unperm = np.concatenate([row_of, dummy_rows]).astype(np.int32)
-        data_args, plan_args = self.store.plan(idx, slot)
-        if self.store.last_stream_bytes:
-            # host->device streaming is pod-side traffic: intra-pod ledger
-            # only, so the WAN bytes stay invariant to placement policy
-            self.comm.store_stream(self.store.last_stream_bytes)
-        if getattr(self.store, "last_placement_stats", None):
-            self.last_schedule_stats = {**(self.last_schedule_stats or {}),
-                                        **self.store.last_placement_stats}
+        with tel.span("pack", m_real=m_real, m_pad=m_pad,
+                      policy=self.store.policy) as psp:
+            row_to_group = self.store.place(groups, m_pad)
+            idx = np.zeros((m_pad, self.cfg.gamma), np.int32)
+            slot = np.zeros((m_pad, self.cfg.gamma), np.float32)
+            row_of = np.zeros(m_real, np.int64)
+            for r, g in enumerate(row_to_group):
+                if g < 0:
+                    continue
+                row_of[g] = r
+                for ci, cid in enumerate(groups[g]):
+                    idx[r, ci] = cid
+                    slot[r, ci] = 1.0
+            dummy_rows = np.flatnonzero(row_to_group < 0)
+            unperm = np.concatenate([row_of, dummy_rows]).astype(np.int32)
+            with tel.span("store_stream", policy=self.store.policy) as ssp:
+                data_args, plan_args = self.store.plan(idx, slot)
+                ssp.set(bytes=self.store.last_stream_bytes)
+                ssp.sync_on(data_args)
+            if self.store.last_stream_bytes:
+                # host->device streaming is pod-side traffic: intra-pod
+                # ledger only, so the WAN bytes stay invariant to placement
+                self.comm.store_stream(self.store.last_stream_bytes)
+            if getattr(self.store, "last_placement_stats", None):
+                # store placement telemetry rides along under a store_
+                # namespace: a raw merge once let colliding keys (e.g. a
+                # future store "num_mediators") silently clobber the
+                # scheduler's numbers
+                base = self.last_schedule_stats or {}
+                prefixed = {f"store_{k}": v for k, v in
+                            self.store.last_placement_stats.items()}
+                overlap = base.keys() & prefixed.keys()
+                assert not overlap, \
+                    f"schedule/store stats key collision: {sorted(overlap)}"
+                self.last_schedule_stats = {**base, **prefixed}
+            psp.set(stream_bytes=self.store.last_stream_bytes)
         self.num_schedule_packs += 1
         return (data_args, plan_args, jnp.asarray(unperm),
                 jnp.asarray(slot), row_to_group, m_real)
@@ -712,27 +756,39 @@ class FLRoundEngine:
         return self._schedule
 
     def run_round(self) -> None:
-        cfg = self.cfg
+        cfg, tel = self.cfg, self.telemetry
         c = min(cfg.clients_per_round, self.data.num_clients)
-        data_args, plan_args, unperm, slot, row_to_group, m_real = \
-            self.ensure_schedule()
-        keys = self._round_keys(row_to_group, m_real)
-        self.params = self._round_fn(self.params, data_args, plan_args,
-                                     unperm, slot, keys, *self.aug_args())
-        if cfg.aggregate == "weights":
-            self.comm.fedavg_round(c)
-        else:
-            self.comm.astraea_round(c, cfg.gamma, cfg.mediator_epochs)
-        if self._model_size > 1:
-            # intra-pod ledger only: the per-round model-axis param gather
-            # must never pollute the WAN bytes behind the 82% claim
-            self.comm.model_axis_round(self._msize * self._model_size,
-                                       self._model_size)
-        if self.store.exchange_bytes_per_round:
-            # the sharded serve exchange executes with every round program
-            self.comm.store_exchange(self.store.exchange_bytes_per_round)
-        self.comm.end_round()
-        self._round += 1
+        wan0 = self.comm.total_bytes
+        with tel.span("round", round=self._round, cohort=c,
+                      schedule=cfg.schedule, policy=cfg.store) as rsp:
+            data_args, plan_args, unperm, slot, row_to_group, m_real = \
+                self.ensure_schedule()
+            keys = self._round_keys(row_to_group, m_real)
+            with tel.span("aggregate", mediators=m_real) as asp:
+                self.params = self._round_fn(self.params, data_args,
+                                             plan_args, unperm, slot, keys,
+                                             *self.aug_args())
+                asp.sync_on(self.params)
+            if cfg.aggregate == "weights":
+                self.comm.fedavg_round(c)
+            else:
+                self.comm.astraea_round(c, cfg.gamma, cfg.mediator_epochs)
+            if self._model_size > 1:
+                # intra-pod ledger only: the per-round model-axis param
+                # gather must never pollute the bytes behind the 82% claim
+                self.comm.model_axis_round(self._msize * self._model_size,
+                                           self._model_size)
+            if self.store.exchange_bytes_per_round:
+                # the sharded serve exchange executes with every round
+                # program; mark the charge on the timeline too
+                self.comm.store_exchange(self.store.exchange_bytes_per_round)
+                tel.instant("store_exchange",
+                            bytes=self.store.exchange_bytes_per_round)
+            self.comm.end_round()
+            self._round += 1
+            rsp.set(wan_bytes=self.comm.total_bytes - wan0,
+                    traces=self.num_round_traces)
+        tel.observe_round(self, duration_s=rsp.duration_s)
 
     def fit(self, rounds: int, eval_every: int = 10) -> list[dict]:
         for _ in range(rounds):

@@ -50,6 +50,9 @@ class FedAvgTrainer:
     # model-axis size of the 2-D (mediator, model) mesh (see
     # AstraeaTrainer.model_parallel). Ignored when ``mesh`` is given.
     model_parallel: int | None = None
+    # optional obs.Telemetry handle threaded into the engine (host-side
+    # spans + metrics; None = the zero-cost no-op stubs)
+    telemetry: object = None
     seed: int = 0
     loss_fn: object = None           # optional custom local loss
     history: list[dict] = field(default_factory=list)
@@ -78,7 +81,8 @@ class FedAvgTrainer:
                                 pad_mediators_to=pad_m, donate_params=False,
                                 seed=self.seed),
             mesh=mesh, loss_fn=self.loss_fn,
-            aug_plan=engine_plan, adaptive_aug_alpha=adaptive_alpha)
+            aug_plan=engine_plan, adaptive_aug_alpha=adaptive_alpha,
+            telemetry=self.telemetry)
         if phase.mode == "materialized":
             self.engine.comm.plan_broadcast(self.data.num_classes,
                                             self.data.num_clients)

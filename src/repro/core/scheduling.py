@@ -264,7 +264,15 @@ def partition_waves(durations: np.ndarray, wave_size: int
 
 
 def schedule_stats(mediators: list[Mediator]) -> dict[str, float]:
-    """Fig. 7 metrics: distribution of D_KL(P_m || P_u) over mediators."""
+    """Fig. 7 metrics: distribution of D_KL(P_m || P_u) over mediators.
+
+    These keys are an observability surface, not just a return value: the
+    engine stores them as ``last_schedule_stats`` (with the store's
+    placement stats merged under a disjoint ``store_`` prefix) and the
+    telemetry layer republishes each one as an ``astraea_schedule_<key>``
+    / ``astraea_store_<key>`` gauge every round -- renaming a key here
+    renames the exported metric.
+    """
     klds = np.array([m.kld_to_uniform() for m in mediators])
     return {
         "kld_mean": float(klds.mean()),

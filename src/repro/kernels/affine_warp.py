@@ -30,6 +30,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def cost_estimate(b: int, h: int, w: int, c: int,
+                  img_bytes: int = 4) -> pl.CostEstimate:
+    """Analytic cost of one warp launch (also the roofline terms).
+
+    Per image the gather-matrix build touches four (HW, HW) one-hot
+    planes (compare + scale + accumulate ~ 3 ops each) and the
+    contraction is a (HW, HW) x (HW, C) matmul; coordinate math is
+    O(HW) noise. HBM traffic is one image read + one image write plus
+    the tiny affine parameters -- the (HW, HW) gather matrix never
+    leaves VMEM, which is the whole point of the fusion.
+    """
+    hw = h * w
+    return pl.CostEstimate(
+        flops=b * (2 * hw * hw * c + 12 * hw * hw),
+        transcendentals=0,
+        bytes_accessed=b * (2 * hw * c * img_bytes + 4 * 4 + 2 * 4),
+    )
+
+
 def _kernel(mat_ref, trans_ref, img_ref, o_ref):
     _, h, w, c = img_ref.shape
     mat = mat_ref[0]                                    # (2, 2)
@@ -74,5 +93,6 @@ def affine_warp(images: jax.Array, mats: jax.Array, trans: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(images.shape, images.dtype),
+        cost_estimate=cost_estimate(b, h, w, c, images.dtype.itemsize),
         interpret=interpret,
     )(mats.astype(jnp.float32), trans.astype(jnp.float32), images)

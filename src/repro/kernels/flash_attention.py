@@ -26,6 +26,24 @@ DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
 
 
+def cost_estimate(b: int, h: int, sq: int, skv: int, d: int,
+                  io_bytes: int = 4) -> pl.CostEstimate:
+    """Analytic cost of one attention launch (also the roofline terms).
+
+    FLOPs: the two MXU contractions per tile (q k^T and p v), 2*sq*skv*d
+    each over every (batch, head) pair; online-softmax elementwise work
+    is O(sq*skv) noise against them. Transcendentals: one exp per score
+    entry (the correction exps are O(sq) noise). HBM traffic is the
+    flash-attention ideal -- one pass over q, k, v and one o write; the
+    (sq, skv) score matrix never exists in HBM.
+    """
+    return pl.CostEstimate(
+        flops=4 * b * h * sq * skv * d,
+        transcendentals=b * h * sq * skv,
+        bytes_accessed=io_bytes * (2 * b * h * sq * d + 2 * b * h * skv * d),
+    )
+
+
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             scale: float, causal: bool, window: int | None, q_offset: int,
             block_q: int, block_k: int, n_k: int):
@@ -108,5 +126,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q, 1), jnp.float32),   # running denominator
             pltpu.VMEM((block_q, d), jnp.float32),   # fp32 output accumulator
         ],
+        cost_estimate=cost_estimate(b, h, sq, skv, d, q.dtype.itemsize),
         interpret=interpret,
     )(q, k, v)

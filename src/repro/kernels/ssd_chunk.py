@@ -28,6 +28,30 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 
+def cost_estimate(b: int, nc: int, L: int, h: int, p: int, n: int,
+                  io_bytes: int = 4) -> pl.CostEstimate:
+    """Analytic cost of one SSD launch (also the roofline terms).
+
+    Per (batch, chunk, head) tile: three MXU contractions -- C B^T
+    (2 L^2 n), masked scores x dx (2 L^2 p), and the outgoing-state
+    w^T x (2 L n p) -- plus ~3 L^2 elementwise for the decay mask and
+    score scaling. Transcendentals: exp over the (L, L) segment-decay
+    matrix plus the L decay-to-end terms and the chunk gate.
+    HBM traffic: B and C are shared across heads but re-fetched per
+    grid step (grid is (b, nc, h)), so they are charged h times; S is
+    always written fp32.
+    """
+    tiles = b * nc * h
+    return pl.CostEstimate(
+        flops=tiles * (2 * L * L * (n + p) + 2 * L * n * p + 3 * L * L),
+        transcendentals=tiles * (L * L + L + 1),
+        bytes_accessed=tiles * (2 * L * p * io_bytes      # x read + y write
+                                + L * io_bytes + 4        # dt, A[h]
+                                + 2 * L * n * io_bytes    # B, C
+                                + n * p * 4 + 4),         # S, g (fp32)
+    )
+
+
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, g_ref):
     # blocks: x (L, p); dt (L,); a (1,); b, c (L, n)
     x = x_ref[...].astype(jnp.float32)
@@ -101,6 +125,7 @@ def ssd_chunk(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
             jax.ShapeDtypeStruct((b, nc, h, n, p), jnp.float32),
             jax.ShapeDtypeStruct((b, nc, h), jnp.float32),
         ],
+        cost_estimate=cost_estimate(b, nc, L, h, p, n, x.dtype.itemsize),
         interpret=interpret,
     )(x, dt, A, B, C)
     return y, S, g

@@ -298,9 +298,12 @@ _MULTI_DEVICE_SCRIPT = textwrap.dedent("""
         assert e.num_schedule_packs == 2
 
     # (5) locality pass ran and accounted for every scheduled client
+    # (store placement keys ride last_schedule_stats under the store_
+    # namespace so they can never clobber the scheduler's own keys)
     st = s4.last_schedule_stats
-    assert st["local_fetches"] + st["remote_fetches"] == st["total_fetches"]
-    assert st["total_fetches"] == 6
+    assert st["store_local_fetches"] + st["store_remote_fetches"] \
+        == st["store_total_fetches"]
+    assert st["store_total_fetches"] == 6
     print("OK")
 """)
 
