@@ -859,6 +859,131 @@ def bench_store(scale: E.Scale):
 
 
 # ----------------------------------------------------------------------
+# LoRA adapter-delta WAN exchange: bytes and round-time vs adapter rank
+# ----------------------------------------------------------------------
+
+def bench_lora(scale: E.Scale):
+    """Parameter-efficient WAN exchange (models/lora.py mapping table) on
+    the astraea engine: sweep adapter rank over {0, 1, 2, full} against
+    the full-delta oracle on the tiny letterfreq federation.
+
+    The evidence this bench commits is the acceptance bar of the LoRA
+    subsystem, asserted here and diffed exactly by the perf gate:
+
+    * exact byte accounting -- the ledger's ``wan_adapter_bytes`` must
+      equal ``rounds * (2*c*E_m + 2*ceil(c/gamma)) * payload`` to the
+      bit (the counters are integer-valued f64, so == is meaningful);
+    * ``rank2_ratio_le_0p10`` -- at rank 2 the adapter legs ship <= 10%
+      of their full-delta counterfactual;
+    * ``full_rank_bitwise`` -- at full rank every entry degenerates to a
+      dense effective tensor, so merged params are BITWISE equal to the
+      no-LoRA oracle after the same rounds;
+    * ``rank0_frozen`` -- rank 0 is an empty mapping: zero adapter bytes
+      and a bit-frozen backbone;
+    * one round trace and one merge trace per engine even with
+      ``reschedule_every_round`` (the zero-retrace contract).
+    """
+    import dataclasses
+    import math
+    import jax
+    from repro.core import LocalSpec
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    from repro.data.federated import partition, EMNIST_LIKE
+    from repro.models import lora as lora_lib
+    from repro.models.cnn import emnist_cnn
+    from repro.optim.optimizers import sgd
+
+    rounds, c, gamma, em = 4, 8, 4, 1
+    legs_per_round = 2 * c * em + 2 * math.ceil(c / gamma)
+    spec = dataclasses.replace(EMNIST_LIKE, num_classes=8, image_size=16)
+    model = emnist_cnn(8, image_size=16)
+    fed = partition(spec, num_clients=12, total_samples=600,
+                    test_samples=160, sizes="instagram",
+                    global_dist="letterfreq", local="random", seed=0,
+                    name="lora-ltrf")
+    local = LocalSpec(batch_size=10, epochs=1)
+    fr = lora_lib.full_rank(model.param_specs())
+
+    def run(rank):
+        cfg = EngineConfig.astraea(clients_per_round=c, gamma=gamma,
+                                   local=local, mediator_epochs=em,
+                                   reschedule_every_round=True,
+                                   donate_params=False, seed=0,
+                                   lora_rank=rank)
+        eng = FLRoundEngine(model, sgd(0.05), fed, cfg)
+        eng.run_round()                      # compile + first schedule
+        jax.block_until_ready(eng.server_state)
+        t0 = time.time()
+        for _ in range(rounds - 1):
+            eng.run_round()
+        jax.block_until_ready(eng.server_state)
+        us = (time.time() - t0) / (rounds - 1) * 1e6
+        return eng, us
+
+    oracle, oracle_us = run(None)
+    oracle_params = jax.device_get(oracle.params)
+    out = {"full_delta": {
+        "us_per_round": oracle_us,
+        "wan_bytes_per_round": oracle.comm.total_bytes / rounds,
+        "traces": oracle.num_round_traces,
+    }}
+    assert oracle.num_round_traces == 1, oracle.num_round_traces
+    _emit("lora/full_delta", oracle_us,
+          f"wan_bytes_per_round={out['full_delta']['wan_bytes_per_round']:.0f};"
+          f"traces={oracle.num_round_traces}")
+
+    def bitwise(a, b):
+        return all(jax.tree.leaves(jax.tree.map(
+            lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()),
+            jax.device_get(a), jax.device_get(b))))
+
+    for rank in (0, 1, 2, fr):
+        eng, us = run(rank)
+        payload = eng.comm.adapter_payload_bytes
+        # exact ledger accounting: every adapter leg at payload bytes, its
+        # counterfactual at model bytes -- integer-valued f64, so ==
+        want_adapter = rounds * legs_per_round * payload
+        want_equiv = rounds * legs_per_round * eng.comm.model_bytes
+        ledger_exact = (eng.comm.wan_adapter_bytes == want_adapter
+                        and eng.comm.wan_adapter_full_equiv_bytes == want_equiv
+                        and eng.comm.total_bytes == want_adapter)
+        assert ledger_exact, (rank, eng.comm.wan_adapter_bytes, want_adapter)
+        assert eng.num_round_traces == 1, (rank, eng.num_round_traces)
+        merged = eng.merged_params()
+        assert eng.num_merge_traces == 1, (rank, eng.num_merge_traces)
+        ratio = eng.comm.adapter_reduction_ratio
+        row = {
+            "adapter_params": lora_lib.num_trainable_params(eng._lora_mapping),
+            "adapter_payload_bytes": payload,
+            "wan_adapter_bytes_per_round": legs_per_round * payload,
+            "wan_full_equiv_bytes_per_round":
+                legs_per_round * eng.comm.model_bytes,
+            "ratio": ratio,
+            "us_per_round": us,
+            "traces": eng.num_round_traces,
+            "ledger_exact": ledger_exact,
+        }
+        if rank == 0:
+            row["rank0_frozen"] = bitwise(merged, eng.params)
+            assert row["rank0_frozen"] and payload == 0, (payload,)
+        if rank == 2:
+            row["rank2_ratio_le_0p10"] = bool(ratio <= 0.10)
+            assert row["rank2_ratio_le_0p10"], ratio
+        if rank == fr:
+            # all entries dense at full rank: merged params must be
+            # bitwise-equal to the no-LoRA oracle after identical rounds
+            row["full_rank_bitwise"] = bitwise(merged, oracle_params)
+            assert row["full_rank_bitwise"]
+        out[f"rank{rank}"] = row
+        _emit(f"lora/rank{rank}", us,
+              f"adapter_bytes_per_round={row['wan_adapter_bytes_per_round']:.0f};"
+              f"ratio={ratio:.4f};payload={payload:.0f};"
+              f"traces={eng.num_round_traces};ledger_exact={ledger_exact}")
+    out["full_rank"] = fr
+    _save("lora", out)
+
+
+# ----------------------------------------------------------------------
 # Kernel microbenchmarks (wall time per call, interpret mode on CPU)
 # ----------------------------------------------------------------------
 
@@ -1009,6 +1134,7 @@ ALL = {
     "augmentation": bench_augmentation,
     "agg": bench_agg,
     "async": bench_async,
+    "lora": bench_lora,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }

@@ -15,6 +15,11 @@ CNN simulator runs.
 axis so each mediator slice tensor-shards its replica (needs a device
 count divisible by t; on CPU force host devices first, e.g.
 XLA_FLAGS=--xla_force_host_platform_device_count=2 --model-parallel 2).
+
+``--lora-rank r`` freezes the backbone and ships ONLY rank-r adapter
+state over the WAN (models/lora.py mapping table); the run prints the
+measured per-round WAN ledger and the adapter/full byte ratio from the
+``CommMeter`` instead of leaving traffic unreported.
 """
 import argparse
 
@@ -25,11 +30,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--lora-rank", type=int, default=None)
+    ap.add_argument("--lora-alpha", type=float, default=None)
     args = ap.parse_args()
     import sys
     sys.argv = ["fl_train", "--arch", args.arch, "--rounds", "3",
                 "--clients", "8", "--gamma", "4", "--seq", "128",
                 "--model-parallel", str(args.model_parallel)]
+    if args.lora_rank is not None:
+        sys.argv += ["--lora-rank", str(args.lora_rank)]
+    if args.lora_alpha is not None:
+        sys.argv += ["--lora-alpha", str(args.lora_alpha)]
     fl_train.main()
 
 

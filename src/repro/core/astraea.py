@@ -76,6 +76,13 @@ class AstraeaTrainer:
     # (launch/mesh.py:make_fl_mesh). None = 1-D mediator mesh (or the
     # ASTRAEA_MODEL_PARALLEL env default). Ignored when ``mesh`` is given.
     model_parallel: int | None = None
+    # true tensor-parallel row compute over the model axis (§8 TP mode);
+    # "auto" = on for TPU/GPU backends, gather oracle elsewhere
+    tp_rows: object = "auto"
+    # LoRA adapter-delta WAN exchange: adapter mapping-table rank built
+    # from model.param_specs() (models/lora.py); None = full-delta legs
+    lora_rank: int | None = None
+    lora_alpha: float | None = None
     # optional obs.Telemetry handle threaded into the engine (host-side
     # spans + metrics; None = the zero-cost no-op stubs)
     telemetry: object = None
@@ -108,7 +115,8 @@ class AstraeaTrainer:
                 use_kernel_agg=self.use_kernel_agg,
                 reschedule_every_round=self.reschedule_every_round,
                 store=self.store, store_exchange=self.store_exchange,
-                pad_mediators_to=pad_m,
+                pad_mediators_to=pad_m, tp_rows=self.tp_rows,
+                lora_rank=self.lora_rank, lora_alpha=self.lora_alpha,
                 donate_params=False, seed=self.seed),
             mesh=mesh, aug_plan=engine_plan,
             adaptive_aug_alpha=adaptive_alpha, telemetry=self.telemetry)

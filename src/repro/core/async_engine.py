@@ -135,13 +135,12 @@ class AsyncRoundEngine:
         # §8 cycle: gather the model-sharded params, fold the replicated
         # wave stack, reshard on the way out -- exact-byte moves, so the
         # 2-D async trajectory stays bitwise too.
-        def _commit(params, stacked, weights):
+        # Under LoRA the committed state is the replicated adapter dict and
+        # the fold is sharding-free; engine._fold is the ONE fold tail
+        # shared with the sync round, which is what keeps S=0 bitwise.
+        def _commit(state, stacked, weights):
             agg = self.engine._aggregate(stacked, weights)
-            if self._parallel_clients:
-                return self.engine.shard_params(agg)
-            params = self.engine.replicate_params(params)
-            return self.engine.shard_params(
-                jax.tree.map(lambda p, d: p + d, params, agg))
+            return self.engine._fold(state, agg)
 
         self._commit_fn = jax.jit(_commit)
         self._straggler: StragglerModel | None = None
@@ -221,7 +220,7 @@ class AsyncRoundEngine:
         r = self._round
         t0 = self.virtual_time
         keys = eng._round_keys(rtg, m_real, round_idx=r)
-        snapshot = eng.params                # dispatch snapshot for round r
+        snapshot = eng.server_state         # dispatch snapshot for round r
         for wi, wave in enumerate(waves):
             rows = np.sort(np.asarray(wave, np.int64))
             wave_span = tel.span("wave", wave=wi, round=r,
@@ -233,7 +232,7 @@ class AsyncRoundEngine:
                 wslot = slot * jnp.asarray(mask)  # members bitwise, rest 0
                 stacked, weights = eng.wave_fn(snapshot, data_args,
                                                plan_args, unperm, wslot,
-                                               keys, *eng.aug_args())
+                                               keys, *eng.extra_args())
                 rj = jnp.asarray(rows)
                 vals = jax.tree.map(lambda a: a[rj], stacked)
                 wts = weights[rj]
@@ -252,11 +251,13 @@ class AsyncRoundEngine:
                 else:
                     eng.comm.astraea_wave(clients, len(rows),
                                           eng.cfg.mediator_epochs)
-                if eng._model_size > 1:
-                    # every wave execution gathers the model-sharded
-                    # snapshot (wave_fn's replicate_params) -- one
+                if eng._model_size > 1 and not eng._tp_rows:
+                    # every gather-oracle wave execution gathers the
+                    # model-sharded weights (wave_fn's _prep: the params
+                    # snapshot, or the LoRA backbone operand) -- one
                     # intra-pod charge per wave, unlike the WAN ledger
-                    # where waves only re-partition a round's fixed total
+                    # where waves only re-partition a round's fixed total.
+                    # TP-rows waves never gather.
                     eng.comm.model_axis_round(eng._msize * eng._model_size,
                                               eng._model_size)
                 if eng.store.exchange_bytes_per_round:
@@ -309,12 +310,14 @@ class AsyncRoundEngine:
         stack = jax.tree.map(lambda *xs: jnp.concatenate(xs),
                              *(parts_v + [dvals]))
         wvec = jnp.concatenate(parts_w + [dwts])
-        if self.engine._model_size > 1:
-            # the jitted commit gathers the model-sharded params too
+        if self.engine._model_size > 1 and self.engine._lora_mapping is None:
+            # the jitted commit gathers the model-sharded params too; the
+            # LoRA commit folds replicated adapters (no gather)
             self.engine.comm.model_axis_round(
                 self.engine._msize * self.engine._model_size,
                 self.engine._model_size)
-        self.engine.params = self._commit_fn(self.engine.params, stack, wvec)
+        self.engine.server_state = self._commit_fn(self.engine.server_state,
+                                                   stack, wvec)
         self.num_commits += 1
         self.commit_log.append({
             "round": r, "time": float(c_time),
@@ -325,7 +328,7 @@ class AsyncRoundEngine:
         csp.set(folded_rows=self.commit_log[-1]["folded_rows"],
                 staleness_max=max(stales) if stales else 0,
                 pending_after=len(self._pending))
-        csp.sync_on(self.engine.params)
+        csp.sync_on(self.engine.server_state)
 
     def flush(self) -> None:
         """Fold every still-pending straggler wave (end of training).
@@ -355,7 +358,7 @@ class AsyncRoundEngine:
             if last:
                 self.flush()
             if self._round % eval_every == 0 or last:
-                m = evaluate(eng.model, eng.params,
+                m = evaluate(eng.model, eng.merged_params(),
                              eng.data.test_images, eng.data.test_labels)
                 stales = [s for c in self.commit_log for s in c["staleness"]]
                 m.update(round=self._round, traffic_mb=eng.comm.megabytes,

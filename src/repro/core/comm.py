@@ -51,6 +51,18 @@ Client placement and model parallelism are server-side deployment
 details -- they move bytes over the pod interconnect or the host link,
 not the WAN -- so none of them may inflate ``total_bytes`` (asserted in
 tests/test_comm.py: the WAN ledger is invariant to store policy).
+
+**Adapter-exchange mode.** With ``adapter_payload_bytes`` set (the engine
+installs it from the LoRA mapping table, ``models/lora.py``), every model-
+exchange leg ships the adapter state instead of the full tensors: the
+same round/wave entry points charge ``legs * adapter_payload_bytes`` onto
+``total_bytes`` and the ``wan_adapter_bytes`` breakdown, while
+``wan_adapter_full_equiv_bytes`` accrues what those legs WOULD have cost
+full-size -- so ``adapter_reduction_ratio`` (adapter/full, the scrapeable
+Prometheus gauge) needs no external bookkeeping.  Without it the legs
+charge full model bytes onto ``wan_full_delta_bytes``, the historical
+behavior.  All counters stay integer-valued floats well below 2**53, so
+the split is exact, not approximate.
 """
 from __future__ import annotations
 
@@ -65,6 +77,15 @@ class CommMeter:
     total_bytes: float = 0.0            # WAN ledger (client <-> server)
     intra_pod_bytes: float = 0.0        # datacenter ledger (model-axis TP
     #                                     + client-store stream/exchange)
+    # bytes of ONE model-exchange leg under LoRA adapter exchange; None =
+    # full-delta exchange (every leg costs model_bytes)
+    adapter_payload_bytes: float | None = None
+    # WAN breakdown (wan_full_delta + wan_adapter sum to the exchange
+    # share of total_bytes; plan broadcasts ride outside the split)
+    wan_full_delta_bytes: float = 0.0
+    wan_adapter_bytes: float = 0.0
+    # full-size counterfactual of the adapter legs (ratio denominator)
+    wan_adapter_full_equiv_bytes: float = 0.0
     # intra-pod breakdown (each sums into intra_pod_bytes)
     model_axis_tp_bytes: float = 0.0
     store_stream_bytes: float = 0.0
@@ -124,28 +145,50 @@ class CommMeter:
         ledger is only auditable if every message is on it."""
         self.total_bytes += num_entries * bytes_per_entry * num_clients
 
+    # ---- model-exchange legs (the one WAN charging primitive) ----
+    def _exchange(self, legs: float) -> None:
+        """Charge ``legs`` model-exchange legs on the WAN ledger, routed by
+        payload mode: full tensors (``wan_full_delta_bytes``) or the LoRA
+        adapter state (``wan_adapter_bytes``, with the full-size
+        counterfactual accrued for the reduction ratio)."""
+        if self.adapter_payload_bytes is None:
+            moved = legs * self.model_bytes
+            self.wan_full_delta_bytes += moved
+        else:
+            moved = legs * self.adapter_payload_bytes
+            self.wan_adapter_bytes += moved
+            self.wan_adapter_full_equiv_bytes += legs * self.model_bytes
+        self.total_bytes += moved
+
+    @property
+    def adapter_reduction_ratio(self) -> float | None:
+        """Adapter-vs-full WAN reduction: bytes actually shipped by the
+        adapter legs over their full-size counterfactual (None before any
+        adapter leg is charged)."""
+        if self.wan_adapter_full_equiv_bytes == 0:
+            return None
+        return self.wan_adapter_bytes / self.wan_adapter_full_equiv_bytes
+
     # ---- per-round accounting (synchronous engine) ----
     def fedavg_round(self, c: int) -> None:
-        self.total_bytes += 2 * c * self.model_bytes
+        self._exchange(2 * c)
 
     def astraea_round(self, c: int, gamma: int, mediator_epochs: int = 1) -> None:
         num_mediators = math.ceil(c / gamma)
-        client_leg = 2 * c * self.model_bytes * mediator_epochs
-        server_leg = 2 * num_mediators * self.model_bytes
-        self.total_bytes += client_leg + server_leg
+        self._exchange(2 * c * mediator_epochs)     # client legs
+        self._exchange(2 * num_mediators)           # server<->mediator legs
 
     # ---- per-wave accounting (async engine) ----
     def fedavg_wave(self, clients: int) -> None:
         """One async FedAvg wave: model down+up for this wave's clients."""
-        self.total_bytes += 2 * clients * self.model_bytes
+        self._exchange(2 * clients)
 
     def astraea_wave(self, clients: int, mediators: int,
                      mediator_epochs: int = 1) -> None:
         """One async Astraea wave: client legs for this wave's clients plus
         the server<->mediator exchange for this wave's mediators."""
-        client_leg = 2 * clients * self.model_bytes * mediator_epochs
-        server_leg = 2 * mediators * self.model_bytes
-        self.total_bytes += client_leg + server_leg
+        self._exchange(2 * clients * mediator_epochs)
+        self._exchange(2 * mediators)
 
     # ---- per-round ledger ----
     def end_round(self) -> None:
@@ -161,6 +204,10 @@ class CommMeter:
         place that enumerates the meter's cumulative surfaces."""
         return {
             "wan_bytes_total": self.total_bytes,
+            "wan_full_delta_bytes_total": self.wan_full_delta_bytes,
+            "wan_adapter_bytes_total": self.wan_adapter_bytes,
+            "wan_adapter_full_equiv_bytes_total":
+                self.wan_adapter_full_equiv_bytes,
             "intra_pod_bytes_total": self.intra_pod_bytes,
             "model_axis_tp_bytes_total": self.model_axis_tp_bytes,
             "store_stream_bytes_total": self.store_stream_bytes,

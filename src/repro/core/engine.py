@@ -162,7 +162,7 @@ bit-identical to the pre-engine trainers on a single device.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dc_replace
 from typing import Any, Callable
 
 import jax
@@ -181,6 +181,7 @@ from repro.launch.compat import shard_map
 from repro.launch.mesh import (default_fl_mesh, model_axis_size,
                                replicated_sharding)
 from repro.launch.sharding import model_only_rules, param_shardings
+from repro.models import lora as lora_lib
 from repro.models.cnn import Model, count_params
 from repro.obs.telemetry import as_telemetry
 from repro.optim.optimizers import Optimizer
@@ -299,6 +300,19 @@ class EngineConfig:
     # pass -- the Mosaic path for 1e5+-client reschedules on TPU
     reschedule_kernel: bool = False
     reschedule_every_round: bool = False
+    # true tensor-parallel row compute (§8 TP mode): "auto" turns it on
+    # when the mesh has a model axis AND the backend's partitioner can
+    # handle lax.scan under partial-auto shard_map (TPU/GPU); True forces
+    # it (raising on CPU); False keeps the gather->replicated-compute
+    # oracle everywhere. model=1 meshes always resolve to the oracle.
+    tp_rows: bool | str = "auto"
+    # LoRA adapter exchange: rank of the per-tensor adapter mapping table
+    # built from model.param_specs() (models/lora.py). None = full-delta
+    # exchange (historical behavior); 0 = fully frozen backbone; at
+    # rank >= models.lora.full_rank(specs) every entry degenerates to
+    # dense and the trajectory is bitwise the full-delta oracle's.
+    lora_rank: int | None = None
+    lora_alpha: float | None = None         # merge scale; None = rank (1.0)
     donate_params: bool = True
     # floor for the padded mediator count (rounded up to the mesh size);
     # fixes M across reschedules so the round executable is jitted once
@@ -325,6 +339,13 @@ class EngineConfig:
             raise ValueError("weight aggregation implies gamma=1 (FedAvg)")
         if self.pad_mediators_to is not None and self.pad_mediators_to < 1:
             raise ValueError("pad_mediators_to must be >= 1")
+        if self.tp_rows not in (True, False, "auto"):
+            raise ValueError(f"tp_rows must be True, False or 'auto', "
+                             f"got {self.tp_rows!r}")
+        if self.lora_rank is not None and self.lora_rank < 0:
+            raise ValueError("lora_rank must be >= 0")
+        if self.lora_alpha is not None and self.lora_rank is None:
+            raise ValueError("lora_alpha requires lora_rank")
 
     @classmethod
     def astraea(cls, *, clients_per_round: int, gamma: int, local: LocalSpec,
@@ -423,6 +444,48 @@ class FLRoundEngine:
             self._model_size if self._param_shardings is not None else 1)
         self.comm = CommMeter(count_params(self.params))
 
+        # ---- §8 TP mode: shard the row compute over the model axis ----
+        self._tp_rows = self._resolve_tp_rows()
+
+        # ---- LoRA adapter exchange (models/lora.py mapping table) ----
+        # With a mapping installed, self.params becomes the FROZEN
+        # backbone: the round's donated arg-0 state is the flat adapter
+        # dict, the backbone + the seeded frozen-A bases ride as trailing
+        # value-swap operands (the aug_args pattern), and only adapter
+        # bytes are charged on the WAN ledger.
+        self._lora_mapping = None
+        self._lora_a = None
+        self.adapters = None
+        self._merge_fn = None
+        self.num_merge_traces = 0           # merged_params (re)compilations
+        if cfg.lora_rank is not None:
+            if model.param_specs is None:
+                raise ValueError(
+                    "lora_rank requires a model with param_specs (the "
+                    "adapter mapping table is built from its LogicalParam "
+                    "tree)")
+            mapping = lora_lib.build_mapping(model.param_specs(),
+                                             cfg.lora_rank, cfg.lora_alpha)
+            self._lora_mapping = mapping
+            a_key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                                       lora_lib.A_SALT)
+            self._lora_a = jax.device_put(
+                lora_lib.init_adapter_A(a_key, mapping), replicated)
+            self.adapters = jax.device_put(
+                lora_lib.init_adapter_state(mapping, self.params), replicated)
+            # every model-exchange leg now ships the adapter payload; the
+            # meter books it under wan_adapter_bytes and keeps the
+            # full-size counterfactual for the scrapeable reduction ratio
+            self.comm.adapter_payload_bytes = lora_lib.exchange_nbytes(
+                mapping, self.comm.bytes_per_param)
+
+            def _merge(backbone, a_tree, state):
+                self.num_merge_traces += 1      # python: trace-time only
+                return lora_lib.merge_params(backbone, a_tree, state,
+                                             mapping)
+
+            self._merge_fn = jax.jit(_merge)
+
         # ---- online-rebalancing plan (Alg. 2, device-resident mode) ----
         self._aug_plan = None
         self.last_plan: np.ndarray | None = None
@@ -466,10 +529,71 @@ class FLRoundEngine:
         # the same thing through its inflated client data)
         self._counts = self._raw_counts * (1.0 + plan_np.astype(np.float64))
 
+    def _resolve_tp_rows(self) -> bool:
+        """Resolve ``cfg.tp_rows`` against the mesh and backend.
+
+        TP row compute only exists when the params actually shard over a
+        model axis; ``"auto"`` additionally requires a TPU/GPU backend
+        because the XLA-CPU partitioner crashes on ``lax.scan`` under
+        partial-auto shard_map (§8) -- CPU always falls back to the
+        gather->replicated-compute oracle.  An explicit ``True`` on an
+        unsupported backend raises instead of silently downgrading."""
+        mode = self.cfg.tp_rows
+        if mode is False or self._model_size <= 1 \
+                or self._param_shardings is None:
+            return False
+        supported = jax.default_backend() in ("tpu", "gpu")
+        if mode == "auto":
+            return supported
+        if not supported:
+            raise ValueError(
+                f"tp_rows=True needs a TPU/GPU backend, got "
+                f"{jax.default_backend()!r}: the XLA-CPU partitioner "
+                "crashes on lax.scan under partial-auto shard_map (§8). "
+                "Use tp_rows='auto' to fall back to the gather oracle.")
+        return True
+
     def aug_args(self) -> tuple:
         """The round executable's trailing Alg. 2 operand (empty if the
         engine holds no plan). Callers of ``wave_fn`` append this."""
         return (self._aug_plan,) if self._aug_plan is not None else ()
+
+    def lora_args(self) -> tuple:
+        """The round executable's trailing LoRA operands: the frozen
+        backbone and the seeded A bases (empty without a mapping).  Pure
+        value swaps -- same shapes/dtypes/shardings every round, so
+        reschedules and backbone refreshes never re-trace."""
+        if self._lora_mapping is None:
+            return ()
+        return (self.params, self._lora_a)
+
+    def extra_args(self) -> tuple:
+        """All trailing value-swap operands of the round/wave executables
+        (Alg. 2 plan first, then the LoRA backbone + A)."""
+        return self.aug_args() + self.lora_args()
+
+    @property
+    def server_state(self):
+        """The trainable surface the round folds into: the flat adapter
+        dict under LoRA, the full params otherwise."""
+        if self._lora_mapping is not None:
+            return self.adapters
+        return self.params
+
+    @server_state.setter
+    def server_state(self, value):
+        if self._lora_mapping is not None:
+            self.adapters = value
+        else:
+            self.params = value
+
+    def merged_params(self):
+        """Evaluation-ready weights: the jitted merge-to-backbone value
+        swap under LoRA (one trace for the engine's lifetime --
+        ``num_merge_traces``), the params themselves otherwise."""
+        if self._lora_mapping is None:
+            return self.params
+        return self._merge_fn(self.params, self._lora_a, self.adapters)
 
     def replicate_params(self, params: PyTree) -> PyTree:
         """Gather model-axis-sharded params to model-replicated (inside a
@@ -501,16 +625,23 @@ class FLRoundEngine:
     def _build_round_fn(self, loss_fn):
         cfg, store = self.cfg, self.store
         parallel_clients = cfg.aggregate == "weights"
-        if parallel_clients:
-            client_update = make_client_update(self.model, self.opt, cfg.local,
-                                               loss_fn=loss_fn)
-        else:
-            mediator_update = make_mediator_update(self.model, self.opt,
-                                                   cfg.local,
-                                                   cfg.mediator_epochs,
-                                                   loss_fn=loss_fn)
+        lora_on = self._lora_mapping is not None
+
+        def _updates_for(model):
+            if parallel_clients:
+                return make_client_update(model, self.opt, cfg.local,
+                                          loss_fn=loss_fn)
+            return make_mediator_update(model, self.opt, cfg.local,
+                                        cfg.mediator_epochs, loss_fn=loss_fn)
+
+        # without LoRA the update program is fixed at build time; with it,
+        # the per-row program trains the ADAPTER tree through a model whose
+        # apply merges into the traced backbone, so the update closures are
+        # built at trace time (once -- the round is traced once)
+        base_update = None if lora_on else _updates_for(self.model)
         P_med = P("mediator")
         use_aug = self._aug_plan is not None
+        n_aug = 1 if use_aug else 0
 
         def _rows(fn, params, *batched):
             if cfg.row_exec == "map":
@@ -526,29 +657,43 @@ class FLRoundEngine:
                 jax.random.fold_in(key, augmentation.AUG_SALT), x, y, m,
                 aplan, impl=cfg.warp_impl)
 
-        def _train(params, data, plan, slot, keys, *aug):
+        def _train(state, data, plan, slot, keys, *extra):
             # plan/slot/keys arrive as this device's (M_local, ...) shards;
             # the store resolves them against its resident client buffers.
-            # aug, when present, is the replicated (num_classes,) Alg. 2
-            # plan; the resample+warp runs INSIDE the per-row program so
-            # row_exec="map" keeps its batch-size-invariant bit-identity.
+            # extra carries the value-swap operands: the replicated
+            # (num_classes,) Alg. 2 plan when augmenting, then the LoRA
+            # (backbone, a_tree) pair when a mapping is installed -- in
+            # which case arg-0 `state` is the flat adapter dict and the
+            # update closures train it through the merged-apply model.
+            aug = extra[:n_aug]
+            if lora_on:
+                backbone, a_tree = extra[n_aug:]
+                mapping = self._lora_mapping
+                merged = dc_replace(
+                    self.model,
+                    apply=lambda tp, x, **kw: self.model.apply(
+                        lora_lib.merge_params(backbone, a_tree, tp, mapping),
+                        x, **kw))
+                update = _updates_for(merged)
+            else:
+                update = base_update
             xs, ys, ms_raw = store.slot_data(data, plan)
             if parallel_clients:
                 ms = ms_raw[:, 0] * slot[:, :1]
-                row_fn = client_update
+                row_fn = update
                 weights = ms.sum(axis=1)
                 if use_aug:
                     (aplan,) = aug
                     def row_fn(p, x, y, m, k):           # noqa: F811
                         ax, ay = _aug_one(k, x, y, m, aplan)
-                        return client_update(p, ax, ay, m, k)
+                        return update(p, ax, ay, m, k)
                     # Eq. 6 over the expected post-augmentation sizes
                     weights = (ms * (1.0 + aplan.astype(jnp.float32)[ys[:, 0]])
                                ).sum(axis=1)
-                outs = _rows(row_fn, params, xs[:, 0], ys[:, 0], ms, keys)
+                outs = _rows(row_fn, state, xs[:, 0], ys[:, 0], ms, keys)
                 return outs, weights
             ms = ms_raw * slot[..., None]
-            row_fn = mediator_update
+            row_fn = update
             weights = ms.sum(axis=(1, 2))
             if use_aug:
                 (aplan,) = aug
@@ -560,25 +705,34 @@ class FLRoundEngine:
                         lambda kk, x, y, m: augmentation.online_augment_batch(
                             kk, x, y, m, aplan, impl=cfg.warp_impl)
                     )(aks, xr, yr, mr)
-                    return mediator_update(p, ax, ay, mr, k)
+                    return update(p, ax, ay, mr, k)
                 weights = (ms * (1.0 + aplan.astype(jnp.float32)[ys])
                            ).sum(axis=(1, 2))
-            outs = _rows(row_fn, params, xs, ys, ms, keys)
+            outs = _rows(row_fn, state, xs, ys, ms, keys)
             return outs, weights
 
         aug_specs = (P(),) if use_aug else ()
+        # LoRA trailing operands: backbone + frozen A, replicated over the
+        # mediator axis (under TP rows the backbone's model sharding rides
+        # the compiler-auto model axis; under the gather oracle it arrives
+        # model-replicated -- round_fn gathers it first)
+        lora_specs = (P(), P()) if lora_on else ()
+        # §8: with TP rows only the mediator axis is manual -- the model
+        # axis stays compiler-auto so the row forward/backward runs truly
+        # tensor-parallel (never materializing the full replica); otherwise
+        # every mesh axis is manual (identical replicated-compute columns,
+        # and partial-auto would trip the XLA-CPU scan crash)
+        manual = ("mediator",) if self._tp_rows \
+            else tuple(self.mesh.axis_names)
         train = mediator_shard_map(
             _train, self.mesh,
             in_specs=(P(), store.data_specs, store.plan_specs,
-                      P_med, P_med) + aug_specs,
+                      P_med, P_med) + aug_specs + lora_specs,
             out_specs=(P_med, P_med),
-            # every mesh axis manual: the model columns run identical
-            # replicated-compute programs (§8), and partial-auto would
-            # trip the XLA-CPU scan crash
-            manual_axes=tuple(self.mesh.axis_names))
+            manual_axes=manual)
 
-        def trained_rows(params, data, plan, unperm, slot, keys, *aug):
-            stacked, weights = train(params, data, plan, slot, keys, *aug)
+        def trained_rows(state, data, plan, unperm, slot, keys, *extra):
+            stacked, weights = train(state, data, plan, slot, keys, *extra)
             if store.permutes_rows:             # undo locality placement
                 stacked = jax.tree.map(lambda a: a[unperm], stacked)
                 weights = weights[unperm]
@@ -589,31 +743,62 @@ class FLRoundEngine:
             weights = jax.lax.with_sharding_constraint(weights, rep)
             return stacked, weights
 
-        def round_fn(params, data, plan, unperm, slot, keys, *aug):
-            self._note_trace("round_fn")        # python: counts (re)traces
-            params = self.replicate_params(params)      # §8: model gather
-            stacked, weights = trained_rows(params, data, plan, unperm, slot,
-                                            keys, *aug)
-            agg = self._aggregate(stacked, weights)
-            if parallel_clients:
-                return self.shard_params(agg)
-            return self.shard_params(
-                jax.tree.map(lambda p, d: p + d, params, agg))
+        def _prep(state, extra):
+            # the pre-shard_map gathers of the gather oracle: replicate
+            # the model-sharded weights (arg-0 params, or the LoRA
+            # backbone operand) so the fully-manual region sees them
+            # whole.  Under TP rows both stay model-sharded -- that is
+            # the point -- and on a 1-D mesh both are identities.
+            if self._tp_rows:
+                return state, extra
+            if lora_on:
+                backbone, a_tree = extra[n_aug:]
+                return state, extra[:n_aug] + (
+                    self.replicate_params(backbone), a_tree)
+            return self.replicate_params(state), extra
 
-        def wave_fn(params, data, plan, unperm, slot, keys, *aug):
+        def round_fn(state, data, plan, unperm, slot, keys, *extra):
+            self._note_trace("round_fn")        # python: counts (re)traces
+            state, extra = _prep(state, extra)          # §8: model gather
+            stacked, weights = trained_rows(state, data, plan, unperm, slot,
+                                            keys, *extra)
+            agg = self._aggregate(stacked, weights)
+            return self._fold(state, agg)
+
+        def wave_fn(state, data, plan, unperm, slot, keys, *extra):
             # the wave-partitioned entry point (core/async_engine.py): the
             # SAME full padded-M program, stopping before aggregation. The
             # caller zeroes the slot rows of mediators outside the wave
             # (exact no-ops, like dummy mediators), so one trace serves
             # every wave of every reschedule. No donation: the dispatch
-            # snapshot params are shared by all waves of a round.
+            # snapshot state is shared by all waves of a round.
             self._note_trace("wave_fn")         # python: counts (re)traces
-            params = self.replicate_params(params)      # §8: model gather
-            return trained_rows(params, data, plan, unperm, slot, keys, *aug)
+            state, extra = _prep(state, extra)          # §8: model gather
+            return trained_rows(state, data, plan, unperm, slot, keys, *extra)
 
         self.wave_fn = jax.jit(wave_fn)
         donate = (0,) if cfg.donate_params else ()
         return jax.jit(round_fn, donate_argnums=donate)
+
+    def _fold(self, state, agg) -> PyTree:
+        """Fold the Eq. 6 aggregate into the server state -- the shared
+        tail of the sync round and the async commit, so S=0 async stays
+        bitwise equal to sync by construction.
+
+        Without LoRA this is the historical params fold: take the
+        aggregate outright under weight aggregation, else add the delta to
+        the (model-replicated) params, and reshard onto the model axis.
+        Under LoRA the state is the replicated flat adapter dict and the
+        fold is sharding-free."""
+        if self._lora_mapping is not None:
+            if self.cfg.aggregate == "weights":
+                return agg
+            return jax.tree.map(lambda s, d: s + d, state, agg)
+        if self.cfg.aggregate == "weights":
+            return self.shard_params(agg)
+        return self.shard_params(
+            jax.tree.map(lambda p, d: p + d, self.replicate_params(state),
+                         agg))
 
     def _aggregate(self, stacked: PyTree, weights: jax.Array) -> PyTree:
         """Eq. 6 over the stacked (M, ...) mediator results."""
@@ -765,17 +950,23 @@ class FLRoundEngine:
                 self.ensure_schedule()
             keys = self._round_keys(row_to_group, m_real)
             with tel.span("aggregate", mediators=m_real) as asp:
-                self.params = self._round_fn(self.params, data_args,
-                                             plan_args, unperm, slot, keys,
-                                             *self.aug_args())
-                asp.sync_on(self.params)
+                self.server_state = self._round_fn(self.server_state,
+                                                   data_args, plan_args,
+                                                   unperm, slot, keys,
+                                                   *self.extra_args())
+                asp.sync_on(self.server_state)
             if cfg.aggregate == "weights":
                 self.comm.fedavg_round(c)
             else:
                 self.comm.astraea_round(c, cfg.gamma, cfg.mediator_epochs)
-            if self._model_size > 1:
+            if self._model_size > 1 and (self._lora_mapping is None
+                                         or not self._tp_rows):
                 # intra-pod ledger only: the per-round model-axis param
-                # gather must never pollute the bytes behind the 82% claim
+                # gather must never pollute the bytes behind the 82% claim.
+                # TP-rows + LoRA is the one mode with no gather at all (the
+                # backbone stays sharded and the adapters are replicated);
+                # non-LoRA gathers either in-round or at the _fold add, and
+                # gather-mode LoRA gathers the backbone operand.
                 self.comm.model_axis_round(self._msize * self._model_size,
                                            self._model_size)
             if self.store.exchange_bytes_per_round:
@@ -794,7 +985,7 @@ class FLRoundEngine:
         for _ in range(rounds):
             self.run_round()
             if self._round % eval_every == 0 or self._round == rounds:
-                m = evaluate(self.model, self.params,
+                m = evaluate(self.model, self.merged_params(),
                              self.data.test_images, self.data.test_labels)
                 m.update(round=self._round, traffic_mb=self.comm.megabytes)
                 if self.last_schedule_stats and \

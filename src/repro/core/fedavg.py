@@ -50,6 +50,10 @@ class FedAvgTrainer:
     # model-axis size of the 2-D (mediator, model) mesh (see
     # AstraeaTrainer.model_parallel). Ignored when ``mesh`` is given.
     model_parallel: int | None = None
+    # §8 TP row compute / LoRA adapter exchange (see AstraeaTrainer)
+    tp_rows: object = "auto"
+    lora_rank: int | None = None
+    lora_alpha: float | None = None
     # optional obs.Telemetry handle threaded into the engine (host-side
     # spans + metrics; None = the zero-cost no-op stubs)
     telemetry: object = None
@@ -78,8 +82,10 @@ class FedAvgTrainer:
             EngineConfig.fedavg(clients_per_round=self.clients_per_round,
                                 local=self.local, store=self.store,
                                 store_exchange=self.store_exchange,
-                                pad_mediators_to=pad_m, donate_params=False,
-                                seed=self.seed),
+                                pad_mediators_to=pad_m, tp_rows=self.tp_rows,
+                                lora_rank=self.lora_rank,
+                                lora_alpha=self.lora_alpha,
+                                donate_params=False, seed=self.seed),
             mesh=mesh, loss_fn=self.loss_fn,
             aug_plan=engine_plan, adaptive_aug_alpha=adaptive_alpha,
             telemetry=self.telemetry)

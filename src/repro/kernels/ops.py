@@ -61,6 +61,10 @@ def fedavg_agg_tree(deltas_tree: PyTree, weights: jax.Array, *,
             return fedavg_agg(flat, weights, **kw).reshape(d.shape[1:])
         return jax.tree.map(leaf, deltas_tree)
     leaves, treedef = jax.tree.flatten(deltas_tree)
+    if not leaves:
+        # rank-0 LoRA adapter trees are legitimately empty: aggregating
+        # nothing is the identity, not an error
+        return deltas_tree
     m = leaves[0].shape[0]
     by_dtype: dict[Any, list[int]] = {}
     for i, l in enumerate(leaves):

@@ -19,11 +19,13 @@ import numpy as np
 
 import repro.configs as C
 from repro.core import scheduling
+from repro.core.comm import CommMeter
 from repro.launch.compat import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import param_shardings, TRAIN_RULES
 from repro.launch.steps import make_fl_round
 from repro.models import layers as L
+from repro.models import lora as lora_lib
 from repro.models import transformer as T
 
 
@@ -57,6 +59,13 @@ def main():
                     help="model-axis size of the (data, model) mesh: each "
                          "mediator slice tensor-shards its replica over "
                          "this many devices (device count must divide)")
+    ap.add_argument("--lora-rank", type=int, default=None,
+                    help="LoRA adapter rank: freeze the backbone and ship "
+                         "ONLY the per-tensor adapter state over the WAN "
+                         "(models/lora.py mapping table); 0 freezes "
+                         "everything, unset = full-delta exchange")
+    ap.add_argument("--lora-alpha", type=float, default=None,
+                    help="LoRA merge scale alpha (default: rank, i.e. 1.0)")
     args = ap.parse_args()
 
     cfg = C.reduced(C.get(args.arch))
@@ -76,6 +85,24 @@ def main():
     p_shards = param_shardings(specs, mesh, TRAIN_RULES)
     spec_tree = jax.tree.map(lambda ns: ns.spec, p_shards)
     params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=args.seq)
+
+    # WAN ledger: the paper's traffic claim, measured instead of assumed
+    meter = CommMeter(T.param_count(cfg, max_seq=args.seq),
+                      bytes_per_param=np.dtype(cfg.np_dtype()).itemsize)
+    mapping = None
+    a_tree = state = None
+    if args.lora_rank is not None:
+        mapping = T.adapter_mapping(cfg, args.lora_rank, args.lora_alpha,
+                                    max_seq=args.seq)
+        a_key = jax.random.fold_in(jax.random.PRNGKey(0), lora_lib.A_SALT)
+        a_tree = lora_lib.init_adapter_A(a_key, mapping)
+        state = lora_lib.init_adapter_state(mapping, params)
+        meter.adapter_payload_bytes = lora_lib.exchange_nbytes(
+            mapping, meter.bytes_per_param)
+        print(f"lora rank={args.lora_rank}: "
+              f"{lora_lib.num_trainable_params(mapping)} trainable params, "
+              f"{meter.adapter_payload_bytes} bytes/leg "
+              f"(full leg {int(meter.model_bytes)})")
 
     streams, counts = synth_client_streams(jax.random.PRNGKey(1), args.clients,
                                            cfg.vocab, args.seq)
@@ -100,17 +127,42 @@ def main():
     w = jnp.asarray(np.repeat(weights[:n_mediators], per_med), jnp.float32)
 
     fl_round = make_fl_round(cfg, mesh, spec_tree, learning_rate=args.lr,
-                             local_steps=per_med, mediator_epochs=1)
+                             local_steps=per_med, mediator_epochs=1,
+                             lora_mapping=mapping)
     L.set_activation_mesh(None)
+    fl_jit = jax.jit(fl_round)
 
+    n_clients_sched = sum(len(m.clients) for m in meds[:n_mediators])
     for r in range(args.rounds):
         t0 = time.time()
         with use_mesh(mesh):
-            params = jax.jit(fl_round)(params, tokens, labels, w)
-        loss, _ = T.forward_train(params, cfg,
+            if mapping is not None:
+                state = fl_jit(params, a_tree, state, tokens, labels, w)
+                eval_params = lora_lib.merge_params(params, a_tree, state,
+                                                    mapping)
+            else:
+                params = fl_jit(params, tokens, labels, w)
+                eval_params = params
+        # each round: model/adapter down+up per client plus the
+        # server<->mediator legs (the Astraea WAN formula)
+        wan0 = meter.total_bytes
+        meter.astraea_round(n_clients_sched, args.gamma)
+        meter.end_round()
+        loss, _ = T.forward_train(eval_params, cfg,
                                   {"tokens": tokens[:2], "labels": labels[:2]})
-        print(f"round {r}: loss={float(loss):.4f} ({time.time()-t0:.1f}s)")
+        print(f"round {r}: loss={float(loss):.4f} "
+              f"wan={meter.total_bytes - wan0:.0f}B "
+              f"({time.time()-t0:.1f}s)")
         assert np.isfinite(float(loss))
+
+    # the measured per-round WAN ledger (not the back-of-envelope claim)
+    print("WAN ledger:")
+    for key, total in meter.ledger_totals().items():
+        print(f"  {key}: {total:.0f}")
+    ratio = meter.adapter_reduction_ratio
+    if ratio is not None:
+        print(f"  adapter/full byte ratio: {ratio:.4f} "
+              f"({(1 - ratio) * 100:.1f}% WAN reduction)")
     print("done")
 
 

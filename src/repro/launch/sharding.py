@@ -92,6 +92,34 @@ def param_shardings(specs: PyTree, mesh: Mesh,
     return jax.tree.map(leaf, specs, is_leaf=lambda x: isinstance(x, L.LogicalParam))
 
 
+def adapter_shardings(mapping: dict, mesh: Mesh,
+                      rules: dict[str, list] | None = None
+                      ) -> tuple[PyTree, PyTree]:
+    """NamedSharding trees ``(state, A)`` for a LoRA adapter mapping table
+    (``models/lora.py``).
+
+    Dense entries mirror their backbone tensor's rule-table spec exactly
+    (they ARE the effective tensor).  Factorized entries keep the batch
+    axes' rules, put the backbone's last logical axis on ``dout`` of ``B``
+    and fold-in axes on ``din`` of ``A``, and tag the rank dim
+    ``"lora_rank"`` -- absent from every standard table, so rank is
+    replicated (it is tiny and both factors contract over it)."""
+    rules = rules or TRAIN_RULES
+    state, a = {}, {}
+    for path, e in mapping.items():
+        if e.kind == "dense":
+            state[path] = NamedSharding(
+                mesh, spec_for(e.shape, e.axes, mesh, rules))
+            continue
+        state[path] = NamedSharding(mesh, spec_for(
+            e.state_shape, e.batch_axes + ("lora_rank", e.axes[-1]),
+            mesh, rules))
+        a[path] = NamedSharding(mesh, spec_for(
+            e.a_shape, e.batch_axes + ("lora_din", "lora_rank"),
+            mesh, rules))
+    return state, a
+
+
 def batch_shardings(batch_specs: PyTree, mesh: Mesh) -> PyTree:
     """Shard the leading (batch) dim of every input over the data axes."""
     daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))

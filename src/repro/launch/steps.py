@@ -117,7 +117,7 @@ def make_serve_step(cfg: T.ArchConfig):
 
 def make_fl_round(cfg: T.ArchConfig, mesh, param_spec_tree: PyTree,
                   *, learning_rate: float = 1e-3, local_steps: int = 4,
-                  mediator_epochs: int = 1):
+                  mediator_epochs: int = 1, lora_mapping: dict | None = None):
     """Astraea synchronization round as a single XLA program.
 
     A thin transformer adapter over the engine's shared round machinery
@@ -143,6 +143,14 @@ def make_fl_round(cfg: T.ArchConfig, mesh, param_spec_tree: PyTree,
     (the production memory profile: no (M, ...) stack is materialized --
     the engine's replicated-stack ``eq6_aggregate`` would not fit at pod
     scale).
+
+    With ``lora_mapping`` (a ``models/lora.py`` adapter table) the round
+    becomes parameter-efficient: the returned callable takes
+    ``(backbone, a_tree, state, tokens, labels, weights)``, the backbone
+    and the seeded frozen ``A`` bases stay fixed, each mediator trains the
+    flat adapter ``state`` dict through the merge inside the loss, and
+    Eq. 6 reduces the ADAPTER deltas over the mediator axes -- the only
+    thing that ever needs to ride the WAN.
     """
     from repro.core.engine import mediator_shard_map, psum_eq6
 
@@ -155,6 +163,56 @@ def make_fl_round(cfg: T.ArchConfig, mesh, param_spec_tree: PyTree,
     # auto mechanism.
     pspecs = jax.tree.map(lambda _: P(), param_spec_tree)
     bspec = P(daxes)
+
+    if lora_mapping is not None:
+        from repro.models import lora
+        s_specs = lora.state_spec_tree(lora_mapping, P())
+        a_specs = lora.a_spec_tree(lora_mapping, P())
+
+        def fl_body_lora(backbone, a_tree, state, tokens, labels, weights):
+            from repro.models import layers as _L
+            _L.set_manual_axes(daxes)
+            start = state
+            lb = tokens.shape[0]
+            micro = lb // local_steps
+
+            def sgd_step(s, mb):
+                mt, ml = mb
+
+                def loss_fn(st):
+                    merged = lora.merge_params(backbone, a_tree, st,
+                                               lora_mapping)
+                    loss, _ = T.forward_train(merged, cfg,
+                                              {"tokens": mt, "labels": ml})
+                    return loss
+
+                g = jax.grad(loss_fn)(s)
+                return jax.tree.map(
+                    lambda a, b: (a - learning_rate * b).astype(a.dtype),
+                    s, g), None
+
+            def epoch(s, _):
+                mts = tokens.reshape(local_steps, micro, -1)
+                mls = labels.reshape(local_steps, micro, -1)
+                s, _ = jax.lax.scan(sgd_step, s, (mts, mls))
+                return s, None
+
+            s, _ = jax.lax.scan(epoch, state, None, length=mediator_epochs)
+            # adapter-delta Eq. 6 (f32, same rationale as the full path);
+            # shared frozen A makes this exactly Eq. 6 on weight deltas
+            delta = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                s, start)
+            avg = psum_eq6(delta, jnp.sum(weights), daxes)
+            out = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
+                               start, avg)
+            _L.set_manual_axes(())
+            return out
+
+        return mediator_shard_map(
+            fl_body_lora, mesh,
+            in_specs=(pspecs, a_specs, s_specs, bspec, bspec, bspec),
+            out_specs=s_specs, mediator_axes=daxes, check=False)
 
     def fl_body(params, tokens, labels, weights):
         # tokens here: (local_batch, S) -- this mediator's client stream

@@ -1,0 +1,252 @@
+"""Per-tensor LoRA adapter mapping tables over ``LogicalParam`` spec trees.
+
+The WAN story of parameter-efficient federated fine-tuning: the backbone
+``W`` is frozen on every participant, each weight tensor gets a rank-``r``
+adapter, and ONLY the adapter state crosses the client<->server boundary.
+The bookkeeping is a tunix-style *mapping table*: one entry per backbone
+tensor path, recording how its adapter is shaped, initialized, merged and
+costed (see models/README.md for the full contract).
+
+Two entry kinds make the table a *heterogeneous* adapter tree:
+
+* ``factorized`` -- the classic LoRA pair for a tensor with a real
+  ``(din, dout)`` matmul shape and ``rank < min(din, dout)``.  ``A``
+  ``(batch..., din, rank)`` is FROZEN and derived deterministically from a
+  shared seed (both ends regenerate it; it is never on the wire --
+  FFA-LoRA-style).  The trainable/exchanged state is ``B`` ``(batch...,
+  rank, dout)``, zero-initialized so round 0 starts from the backbone.
+  Merge rule: ``W_eff = W + (alpha / rank) * (A @ B).reshape(W.shape)``.
+  Because every participant shares the same frozen ``A``, Eq. 6 on the
+  ``B`` trees is *exactly* Eq. 6 on the induced weight deltas (linearity),
+  so the engine's aggregation path needs no special casing.
+* ``dense`` -- tensors with no usable factorization (1-D biases/norms
+  after the batch axes) or ``rank >= min(din, dout)``, where a factor pair
+  would cost MORE than the tensor itself.  The state entry IS the
+  effective tensor: initialized as a copy of the backbone value, trained
+  in place, merged by pass-through.  This is what makes the full-rank
+  sweep *bitwise* equal to the full-delta oracle: at full rank every
+  entry is dense, so the trained values, the ``final - start`` deltas,
+  and the server's ``state + delta_agg`` fold are literally the oracle's
+  own computation (a factorized ``W + (u1 + u2)`` accumulation could only
+  ever match to fp tolerance against the oracle's ``(W + u1) + u2``).
+
+``rank=0`` produces an EMPTY mapping: nothing is trainable, nothing is
+exchanged, the backbone stays frozen -- the degenerate probe the tests
+pin.
+
+Batch axes: leading ``LogicalParam`` axes named in ``BATCH_AXES``
+(stacked transformer layers / experts) batch the factorization, so a
+``(L, d, h)`` stacked projection gets ``A: (L, d, r)``, ``B: (L, r, h)``
+and a batched matmul merge.  ``din`` folds every remaining dim but the
+last (a conv ``(kh, kw, cin, cout)`` factorizes as ``din = kh*kw*cin``).
+
+Adapter trees are FLAT dicts keyed by the ``/``-joined tensor path --
+one stable treedef for the engine's donated round state, independent of
+the backbone's nesting.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import LogicalParam
+
+PyTree = Any
+
+# leading logical axes that batch the factorization instead of folding
+# into din (stacked decoder layers, MoE experts)
+BATCH_AXES = ("layers", "expert")
+# fold_in salt for deriving the frozen-A stream off an engine seed
+A_SALT = 0x10AA
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, LogicalParam)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def path_str(key_path) -> str:
+    """Canonical ``/``-joined tensor path (the mapping-table key)."""
+    return "/".join(_key_str(k) for k in key_path)
+
+
+@dataclass(frozen=True)
+class LoraEntry:
+    """One mapping-table row: how tensor ``path`` is adapted.
+
+    ``kind == "factorized"``: frozen ``A (batch_shape + (din, rank))``,
+    trainable ``B (batch_shape + (rank, dout))``, merge
+    ``W + (alpha/rank) * (A @ B).reshape(shape)``.
+    ``kind == "dense"``: the state entry is the effective tensor itself
+    (shape ``shape``), merged by pass-through.
+    """
+    path: str
+    shape: tuple            # full backbone tensor shape
+    axes: tuple             # the tensor's LogicalParam axis names
+    batch_shape: tuple      # leading BATCH_AXES dims
+    batch_axes: tuple       # their axis names
+    din: int                # prod(non-batch dims except last); 0 for dense-1D
+    dout: int               # last dim
+    rank: int
+    alpha: float
+    kind: str               # "factorized" | "dense"
+
+    @property
+    def state_shape(self) -> tuple:
+        if self.kind == "dense":
+            return self.shape
+        return self.batch_shape + (self.rank, self.dout)
+
+    @property
+    def a_shape(self) -> tuple:
+        assert self.kind == "factorized"
+        return self.batch_shape + (self.din, self.rank)
+
+    @property
+    def state_params(self) -> int:
+        return int(np.prod(self.state_shape, dtype=np.int64))
+
+
+def build_mapping(specs: PyTree, rank: int, alpha: float | None = None
+                  ) -> dict[str, LoraEntry]:
+    """Adapter mapping table from a ``LogicalParam`` spec tree.
+
+    ``alpha=None`` defaults to ``alpha=rank`` (merge scale exactly 1, the
+    convention that makes rank sweeps comparable).  ``rank=0`` returns the
+    empty mapping (fully frozen backbone).
+    """
+    if rank < 0:
+        raise ValueError(f"lora rank must be >= 0, got {rank}")
+    if rank == 0:
+        return {}
+    leaves = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)[0]
+    mapping: dict[str, LoraEntry] = {}
+    for key_path, spec in leaves:
+        path = path_str(key_path)
+        nb = 0
+        while nb < len(spec.axes) and spec.axes[nb] in BATCH_AXES:
+            nb += 1
+        batch_shape = spec.shape[:nb]
+        rest = spec.shape[nb:]
+        dout = int(rest[-1]) if rest else 0
+        din = int(np.prod(rest[:-1], dtype=np.int64)) if len(rest) > 1 else 0
+        if len(rest) < 2 or rank >= min(din, dout):
+            kind, r_eff = "dense", 0
+        else:
+            kind, r_eff = "factorized", rank
+        mapping[path] = LoraEntry(
+            path=path, shape=tuple(spec.shape), axes=tuple(spec.axes),
+            batch_shape=tuple(batch_shape), batch_axes=tuple(spec.axes[:nb]),
+            din=din, dout=dout, rank=r_eff,
+            alpha=float(alpha) if alpha is not None else float(rank),
+            kind=kind)
+    return mapping
+
+
+def full_rank(specs: PyTree) -> int:
+    """Smallest rank at which every mapping entry degenerates to dense
+    (== the full-delta oracle, bitwise)."""
+    leaves = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)[0]
+    need = 1
+    for _, spec in leaves:
+        nb = 0
+        while nb < len(spec.axes) and spec.axes[nb] in BATCH_AXES:
+            nb += 1
+        rest = spec.shape[nb:]
+        if len(rest) >= 2:
+            din = int(np.prod(rest[:-1], dtype=np.int64))
+            need = max(need, min(din, int(rest[-1])))
+    return need
+
+
+def _path_key(key, path: str):
+    """Per-tensor frozen-A key: deterministic in the path string alone, so
+    both ends of the WAN regenerate the identical basis from the seed."""
+    return jax.random.fold_in(key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+
+def init_adapter_A(key, mapping: dict[str, LoraEntry]) -> dict:
+    """The frozen factor bases: ``{path: A}`` for the factorized entries
+    only (dense entries have no A).  Never shipped -- seed-derived."""
+    out = {}
+    for path, e in mapping.items():
+        if e.kind != "factorized":
+            continue
+        a = jax.random.normal(_path_key(key, path), e.a_shape, jnp.float32)
+        out[path] = a / np.sqrt(e.din)
+    return out
+
+
+def init_adapter_state(mapping: dict[str, LoraEntry], backbone: PyTree) -> dict:
+    """Round-0 adapter state: zero ``B`` for factorized entries (merge is
+    the identity), a copy of the backbone value for dense entries (the
+    in-place-training start point of the full-delta oracle)."""
+    by_path = {path_str(kp): leaf for kp, leaf
+               in jax.tree_util.tree_flatten_with_path(backbone)[0]}
+    out = {}
+    for path, e in mapping.items():
+        if e.kind == "dense":
+            if path not in by_path:
+                raise KeyError(f"mapping entry {path!r} not found in the "
+                               "backbone param tree")
+            out[path] = by_path[path]
+        else:
+            out[path] = jnp.zeros(e.state_shape, jnp.float32)
+    return out
+
+
+def merge_params(backbone: PyTree, a_tree: dict, state: dict,
+                 mapping: dict[str, LoraEntry]) -> PyTree:
+    """Effective weights: the jit-friendly merge of the mapping table.
+
+    Dense entries pass the state tensor through bitwise; factorized ones
+    add the scaled ``A @ B`` (computed in f32, cast back to the backbone
+    dtype).  Tensors without a mapping entry (rank=0) stay frozen.
+    """
+    def merge_one(key_path, leaf):
+        e = mapping.get(path_str(key_path))
+        if e is None:
+            return leaf
+        if e.kind == "dense":
+            return state[e.path].astype(leaf.dtype)
+        upd = jnp.matmul(a_tree[e.path], state[e.path])   # batch..., din, dout
+        upd = (e.alpha / e.rank) * upd.reshape(leaf.shape)
+        return (leaf.astype(jnp.float32) + upd).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(merge_one, backbone)
+
+
+def exchange_nbytes(mapping: dict[str, LoraEntry],
+                    bytes_per_param: int = 4) -> int:
+    """Bytes of ONE model-exchange leg under the mapping: the state tree
+    only (frozen A is seed-derived on both ends, never on the wire)."""
+    return sum(e.state_params for e in mapping.values()) * bytes_per_param
+
+
+def num_trainable_params(mapping: dict[str, LoraEntry]) -> int:
+    return sum(e.state_params for e in mapping.values())
+
+
+def state_spec_tree(mapping: dict[str, LoraEntry], spec) -> dict:
+    """A ``{path: spec}`` pytree mirroring the adapter state (shard_map
+    in/out specs for the flat state dict)."""
+    return {path: spec for path in mapping}
+
+
+def a_spec_tree(mapping: dict[str, LoraEntry], spec) -> dict:
+    return {path: spec for path, e in mapping.items()
+            if e.kind == "factorized"}

@@ -273,6 +273,17 @@ def param_count(cfg: ArchConfig, max_seq: int = 4096) -> int:
     return sum(int(np.prod(p.shape)) for p in leaves)
 
 
+def adapter_mapping(cfg: ArchConfig, rank: int, alpha: float | None = None,
+                    max_seq: int = 4096) -> dict:
+    """Per-tensor LoRA adapter mapping table over this architecture's
+    param specs (the ``models/lora.py`` contract): wide matmul tensors get
+    rank-``rank`` factor pairs, 1-D norms/biases (and tensors the rank
+    would not compress) fall back to dense entries.  The table is what the
+    federated round ships over the WAN instead of full deltas."""
+    from repro.models import lora
+    return lora.build_mapping(param_specs(cfg, max_seq), rank, alpha)
+
+
 def active_param_count(cfg: ArchConfig, max_seq: int = 4096) -> int:
     """Params touched per token (MoE: top_k of n_experts expert params)."""
     total = param_count(cfg, max_seq)

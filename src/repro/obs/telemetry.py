@@ -129,6 +129,12 @@ class Telemetry:
         ledger_help = {
             "wan_bytes_total":
                 "WAN ledger: client<->server bytes (CommMeter.total_bytes)",
+            "wan_full_delta_bytes_total":
+                "WAN exchange legs shipped full-size (no adapter mapping)",
+            "wan_adapter_bytes_total":
+                "WAN exchange legs shipped as LoRA adapter state",
+            "wan_adapter_full_equiv_bytes_total":
+                "full-size counterfactual of the adapter exchange legs",
             "intra_pod_bytes_total":
                 "datacenter ledger (CommMeter.intra_pod_bytes)",
             "model_axis_tp_bytes_total":
@@ -142,6 +148,13 @@ class Telemetry:
             m.counter(f"astraea_{key}",
                       ledger_help.get(key, "CommMeter cumulative ledger")
                       ).set_total(total)
+        ratio = engine.comm.adapter_reduction_ratio
+        if ratio is not None:
+            # the scrapeable adapter-vs-full WAN reduction (bytes shipped /
+            # full-size counterfactual of the same legs)
+            m.gauge("astraea_wan_adapter_reduction_ratio",
+                    "LoRA adapter WAN bytes over their full-delta "
+                    "equivalent").set(ratio)
         m.gauge("astraea_round_traces",
                 "round executable (re)compilations -- must stay 1"
                 ).set(engine.num_round_traces)

@@ -1,0 +1,284 @@
+"""LoRA adapter-delta exchange: mapping table, merge rule, engine wiring.
+
+The invariants pinned here are the contract of models/lora.py plus its
+engine integration (core/engine.py, core/async_engine.py, core/comm.py):
+
+* mapping construction -- factorized iff the tensor has a real matmul
+  shape AND rank < min(din, dout); batch axes batch the factorization;
+  rank=0 is the empty mapping.
+* merge rule -- ``W + (alpha/rank) * (A @ B).reshape(W.shape)`` for
+  factorized entries, bitwise pass-through for dense ones.
+* full-rank == full-delta oracle, BITWISE, in both aggregation modes
+  (astraea deltas and fedavg weights): at full rank every entry is dense,
+  so the adapter round executes the oracle's own arithmetic.
+* rank 0 == frozen backbone with zero adapter bytes on the WAN.
+* exact byte accounting -- the ledger's adapter counters equal the
+  closed-form ``rounds * legs * payload`` with ``==``, not isclose.
+* zero re-traces across reschedules with adapters on, and one merge
+  trace across repeated ``merged_params()`` calls.
+* async S=0 with adapters is bitwise the sync trajectory (same ledger).
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.async_engine import AsyncRoundEngine, AsyncSpec
+from repro.core.comm import CommMeter
+from repro.core.engine import EngineConfig, FLRoundEngine
+from repro.core.fl import LocalSpec
+from repro.models import lora
+from repro.models.cnn import emnist_cnn
+from repro.models.layers import LogicalParam
+from repro.optim.optimizers import sgd
+
+C, GAMMA, EM, ROUNDS = 8, 4, 1, 3
+LEGS = 2 * C * EM + 2 * math.ceil(C / GAMMA)
+
+
+def tree_bitwise(a, b):
+    a, b = jax.device_get(a), jax.device_get(b)
+    if jax.tree.structure(a) != jax.tree.structure(b):
+        return False
+    return all(jax.tree.leaves(jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b)))
+
+
+def make_engine(fed, mode="astraea", **kw):
+    model = emnist_cnn(8, image_size=16)
+    local = LocalSpec(batch_size=10, epochs=1)
+    if mode == "astraea":
+        cfg = EngineConfig.astraea(clients_per_round=C, gamma=GAMMA,
+                                   local=local, mediator_epochs=EM,
+                                   donate_params=False, seed=0, **kw)
+    else:
+        cfg = EngineConfig.fedavg(clients_per_round=C, local=local,
+                                  donate_params=False, seed=0, **kw)
+    return FLRoundEngine(model, sgd(0.05), fed, cfg)
+
+
+def run_rounds(eng, n=ROUNDS):
+    for _ in range(n):
+        eng.run_round()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# mapping table construction
+# ---------------------------------------------------------------------------
+
+def test_mapping_kinds_and_shapes():
+    specs = emnist_cnn(8, image_size=16).param_specs()
+    m = lora.build_mapping(specs, rank=2)
+    conv = m["conv1/w"]
+    assert conv.kind == "factorized"
+    # conv (5,5,1,12): din folds every non-batch dim but the last
+    assert (conv.din, conv.dout) == (25, 12)
+    assert conv.a_shape == (25, 2) and conv.state_shape == (2, 12)
+    assert conv.alpha == 2.0                      # default alpha = rank
+    bias = m["conv1/b"]
+    assert bias.kind == "dense" and bias.state_shape == bias.shape
+    # every backbone tensor has exactly one entry
+    assert len(m) == len(jax.tree.leaves(specs))
+
+
+def test_mapping_rank_geq_min_dim_goes_dense():
+    specs = {"w": LogicalParam((4, 16), ("embed", "mlp"))}
+    m = lora.build_mapping(specs, rank=4)          # rank == min(4, 16)
+    assert m["w"].kind == "dense"
+    m = lora.build_mapping(specs, rank=3)
+    assert m["w"].kind == "factorized" and m["w"].rank == 3
+
+
+def test_mapping_batch_axes():
+    # stacked-layer projection: the "layers" dim batches the factorization
+    specs = {"proj": LogicalParam((3, 8, 6, 16),
+                                  ("layers", "kh", "embed", "mlp"))}
+    e = lora.build_mapping(specs, rank=2)["proj"]
+    assert e.kind == "factorized"
+    assert e.batch_shape == (3,) and e.batch_axes == ("layers",)
+    assert (e.din, e.dout) == (48, 16)
+    assert e.a_shape == (3, 48, 2) and e.state_shape == (3, 2, 16)
+
+
+def test_rank0_empty_mapping():
+    specs = emnist_cnn(8, image_size=16).param_specs()
+    assert lora.build_mapping(specs, rank=0) == {}
+    assert lora.exchange_nbytes({}) == 0
+    with pytest.raises(ValueError):
+        lora.build_mapping(specs, rank=-1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 32), st.integers(2, 32), st.integers(1, 40))
+def test_mapping_cost_property(din, dout, rank):
+    """Factorized iff rank < min(din, dout); either way the exchanged
+    state never costs more than the dense tensor it adapts."""
+    specs = {"w": LogicalParam((din, dout), ("embed", "mlp"))}
+    e = lora.build_mapping(specs, rank=rank)["w"]
+    if rank < min(din, dout):
+        assert e.kind == "factorized"
+        assert e.state_params == rank * dout
+    else:
+        assert e.kind == "dense"
+        assert e.state_params == din * dout
+    assert e.state_params <= din * dout
+    assert lora.exchange_nbytes({"w": e}) == e.state_params * 4
+    fr = lora.full_rank(specs)
+    assert lora.build_mapping(specs, fr)["w"].kind == "dense"
+
+
+def test_merge_rule_matches_manual_math():
+    key = jax.random.PRNGKey(7)
+    backbone = {"w": jax.random.normal(key, (6, 10)),
+                "b": jax.random.normal(jax.random.fold_in(key, 1), (10,))}
+    specs = {"w": LogicalParam((6, 10), ("embed", "mlp")),
+             "b": LogicalParam((10,), ("mlp",))}
+    m = lora.build_mapping(specs, rank=2, alpha=5.0)
+    a = lora.init_adapter_A(jax.random.fold_in(key, lora.A_SALT), m)
+    state = lora.init_adapter_state(m, backbone)
+    # zero-init B: merge is the identity (bitwise for dense, exact-add 0)
+    merged0 = lora.merge_params(backbone, a, state, m)
+    assert np.array_equal(np.asarray(merged0["b"]), np.asarray(backbone["b"]))
+    np.testing.assert_array_equal(np.asarray(merged0["w"]),
+                                  np.asarray(backbone["w"]))
+    state = {"w": jax.random.normal(jax.random.fold_in(key, 2), (2, 10)),
+             "b": state["b"] + 1.0}
+    merged = lora.merge_params(backbone, a, state, m)
+    want = backbone["w"] + (5.0 / 2.0) * (a["w"] @ state["w"])
+    np.testing.assert_allclose(np.asarray(merged["w"]), np.asarray(want),
+                               rtol=1e-6)
+    # dense entries pass through bitwise
+    assert np.array_equal(np.asarray(merged["b"]), np.asarray(state["b"]))
+
+
+def test_frozen_a_is_seed_deterministic():
+    specs = emnist_cnn(8, image_size=16).param_specs()
+    m = lora.build_mapping(specs, rank=2)
+    k = jax.random.fold_in(jax.random.PRNGKey(3), lora.A_SALT)
+    assert tree_bitwise(lora.init_adapter_A(k, m), lora.init_adapter_A(k, m))
+    # per-path keys: entries differ from each other
+    a = lora.init_adapter_A(k, m)
+    paths = [p for p, e in m.items() if e.kind == "factorized"]
+    assert len(paths) >= 2
+    s0, s1 = a[paths[0]].ravel()[:4], a[paths[1]].ravel()[:4]
+    assert not np.array_equal(np.asarray(s0), np.asarray(s1))
+
+
+# ---------------------------------------------------------------------------
+# engine integration: rank sweep against the full-delta oracle
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def oracle(tiny_federation):
+    return run_rounds(make_engine(tiny_federation))
+
+
+def test_full_rank_bitwise_equals_oracle(tiny_federation, oracle):
+    fr = lora.full_rank(emnist_cnn(8, image_size=16).param_specs())
+    eng = run_rounds(make_engine(tiny_federation, lora_rank=fr))
+    assert tree_bitwise(eng.merged_params(), oracle.params)
+    assert eng.comm.adapter_reduction_ratio == 1.0
+
+
+def test_rank0_frozen_backbone_zero_bytes(tiny_federation):
+    eng = run_rounds(make_engine(tiny_federation, lora_rank=0), n=2)
+    assert eng.adapters == {}
+    assert tree_bitwise(eng.merged_params(), eng.params)
+    assert eng.comm.wan_adapter_bytes == 0
+    assert eng.comm.total_bytes == 0
+    # the counterfactual still accrues, so the ratio is a true 0
+    assert eng.comm.adapter_reduction_ratio == 0.0
+
+
+def test_fedavg_weights_mode_full_rank_bitwise(tiny_federation):
+    f0 = run_rounds(make_engine(tiny_federation, mode="fedavg"), n=2)
+    fr = lora.full_rank(emnist_cnn(8, image_size=16).param_specs())
+    f1 = run_rounds(make_engine(tiny_federation, mode="fedavg",
+                                lora_rank=fr), n=2)
+    assert tree_bitwise(f1.merged_params(), f0.params)
+
+
+def test_rank2_reduces_wan_bytes(tiny_federation, oracle):
+    eng = run_rounds(make_engine(tiny_federation, lora_rank=2))
+    ratio = eng.comm.adapter_reduction_ratio
+    assert ratio is not None and ratio <= 0.10
+    assert eng.comm.total_bytes < oracle.comm.total_bytes
+    # full-size counterfactual of the adapter legs == the oracle's ledger
+    assert eng.comm.wan_adapter_full_equiv_bytes == oracle.comm.total_bytes
+
+
+def test_exact_ledger_accounting(tiny_federation):
+    eng = run_rounds(make_engine(tiny_federation, lora_rank=2))
+    payload = lora.exchange_nbytes(eng._lora_mapping)
+    assert eng.comm.adapter_payload_bytes == payload
+    assert eng.comm.wan_adapter_bytes == ROUNDS * LEGS * payload
+    assert eng.comm.wan_adapter_full_equiv_bytes == \
+        ROUNDS * LEGS * eng.comm.model_bytes
+    assert eng.comm.total_bytes == eng.comm.wan_adapter_bytes
+    assert eng.comm.wan_full_delta_bytes == 0
+
+
+def test_zero_retrace_across_reschedules(tiny_federation):
+    eng = make_engine(tiny_federation, lora_rank=2,
+                      reschedule_every_round=True)
+    run_rounds(eng)
+    assert eng.num_round_traces == 1
+    eng.merged_params()
+    eng.run_round()
+    eng.merged_params()
+    assert eng.num_round_traces == 1
+    assert eng.num_merge_traces == 1
+
+
+def test_async_s0_bitwise_equals_sync(tiny_federation):
+    sync = run_rounds(make_engine(tiny_federation, lora_rank=2))
+    eng = make_engine(tiny_federation, lora_rank=2)
+    a = AsyncRoundEngine(eng, AsyncSpec(staleness_bound=0, wave_size=1))
+    for _ in range(ROUNDS):
+        a.run_round()
+    assert tree_bitwise(eng.adapters, sync.adapters)
+    assert tree_bitwise(eng.merged_params(), sync.merged_params())
+    assert eng.comm.total_bytes == sync.comm.total_bytes
+    assert eng.comm.wan_adapter_bytes == sync.comm.wan_adapter_bytes
+
+
+def test_kernel_agg_on_adapter_trees(tiny_federation):
+    ref = make_engine(tiny_federation, lora_rank=2)
+    ref.run_round()
+    eng = make_engine(tiny_federation, lora_rank=2, use_kernel_agg=True)
+    eng.run_round()
+    for x, y in zip(jax.tree.leaves(jax.device_get(ref.adapters)),
+                    jax.tree.leaves(jax.device_get(eng.adapters))):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+    # rank 0: the fused path must accept the EMPTY adapter tree
+    e0 = make_engine(tiny_federation, lora_rank=0, use_kernel_agg=True)
+    e0.run_round()
+    assert e0.adapters == {}
+
+
+# ---------------------------------------------------------------------------
+# comm meter: the WAN split in isolation
+# ---------------------------------------------------------------------------
+
+def test_comm_meter_adapter_split():
+    m = CommMeter(num_params=1000)                # 4000-byte legs
+    m.fedavg_round(3)
+    assert m.wan_full_delta_bytes == 6 * 4000
+    assert m.adapter_reduction_ratio is None
+    m.adapter_payload_bytes = 400
+    m.astraea_round(C, GAMMA, EM)
+    assert m.wan_adapter_bytes == LEGS * 400
+    assert m.wan_adapter_full_equiv_bytes == LEGS * 4000
+    assert m.adapter_reduction_ratio == 0.1
+    assert m.total_bytes == 6 * 4000 + LEGS * 400
+    totals = m.ledger_totals()
+    assert totals["wan_adapter_bytes_total"] == m.wan_adapter_bytes
+    assert totals["wan_full_delta_bytes_total"] == m.wan_full_delta_bytes
+    assert totals["wan_adapter_full_equiv_bytes_total"] == \
+        m.wan_adapter_full_equiv_bytes

@@ -1,0 +1,184 @@
+"""TP-rows mode (§8): the ``model`` axis doing real work in engine rows.
+
+``EngineConfig.tp_rows`` resolution contract (core/engine.py):
+
+* ``False`` / ``model=1`` meshes / no param shardings -> gather oracle
+  (replicate the model-sharded weights before the fully-manual region);
+  an explicit ``True`` on a model=1 mesh also resolves off -- there is
+  no model axis to split over, nothing to raise about.
+* ``"auto"`` -> TP rows only on TPU/GPU backends; the XLA-CPU
+  partitioner crashes on ``lax.scan`` under partial-auto shard_map, so
+  CPU always falls back to the (bitwise-pinned) gather oracle.
+* ``True`` on an unsupported backend -> ValueError, never a silent
+  downgrade.
+
+The 4-device subprocess mirrors tests/test_model_mesh.py (the forced
+device count must precede jax initialization) and additionally pins the
+2-D gather oracle WITH LoRA adapters against the 1-D trajectory.  The
+true TP-vs-oracle equality check self-skips off TPU/GPU -- it is the one
+leg this container cannot execute (see .github/workflows/ci.yml
+``tier1-tp-rows``).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LocalSpec
+from repro.core.engine import EngineConfig, FLRoundEngine
+from repro.launch.mesh import make_fl_mesh, make_mediator_mesh
+from repro.models.cnn import emnist_cnn
+from repro.optim import adam
+
+
+def _cfg(**kw):
+    kw.setdefault("donate_params", False)
+    return EngineConfig.astraea(clients_per_round=6, gamma=3,
+                                local=LocalSpec(10, 1), seed=0, **kw)
+
+
+def _params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_tp_rows_config_validation():
+    with pytest.raises(ValueError, match="tp_rows"):
+        _cfg(tp_rows="yes")
+    for mode in (True, False, "auto"):
+        assert _cfg(tp_rows=mode).tp_rows == mode
+
+
+def test_tp_rows_resolves_off_without_model_axis(tiny_federation):
+    """model=1 meshes have nothing to tensor-split: every mode -- even an
+    explicit True -- resolves to the oracle, and the (1,1) 2-D trajectory
+    stays bitwise the 1-D one."""
+    model = emnist_cnn(8, image_size=16)
+
+    def run(mesh, mode):
+        e = FLRoundEngine(model, adam(1e-3), tiny_federation,
+                          _cfg(tp_rows=mode), mesh=mesh)
+        assert e._tp_rows is False
+        e.run_round()
+        e.run_round()
+        return e
+
+    e_true = run(make_fl_mesh(mediator=1, model=1), True)
+    e_auto = run(make_fl_mesh(mediator=1, model=1), "auto")
+    e_1d = run(make_mediator_mesh(1), "auto")
+    _params_equal(e_true.params, e_auto.params)
+    _params_equal(e_auto.params, e_1d.params)
+    assert e_auto.num_round_traces == 1
+
+
+_FORCED_4DEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ.pop("ASTRAEA_MODEL_PARALLEL", None)
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.core import LocalSpec
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    from repro.data.federated import partition, EMNIST_LIKE
+    from repro.launch.mesh import make_fl_mesh, make_mediator_mesh
+    from repro.models.cnn import emnist_cnn
+    from repro.optim import adam
+
+    assert jax.default_backend() == "cpu"
+    spec = dataclasses.replace(EMNIST_LIKE, num_classes=8, image_size=16)
+    fed = partition(spec, num_clients=12, total_samples=600, test_samples=160,
+                    sizes="instagram", global_dist="letterfreq",
+                    local="random", seed=0, name="tiny")
+    model = emnist_cnn(8, image_size=16)
+
+    def cfg(**kw):
+        return EngineConfig.astraea(clients_per_round=6, gamma=3,
+                                    local=LocalSpec(10, 1), seed=0,
+                                    pad_mediators_to=2, row_exec="map",
+                                    donate_params=False, **kw)
+
+    m22 = make_fl_mesh(mediator=2, model=2)
+
+    # (a) an explicit True on the CPU backend must raise, not downgrade
+    try:
+        FLRoundEngine(model, adam(1e-3), fed, cfg(tp_rows=True), mesh=m22)
+    except ValueError as e:
+        assert "TPU/GPU" in str(e), e
+    else:
+        raise AssertionError("tp_rows=True on CPU did not raise")
+
+    # (b) "auto" resolves to the gather oracle on CPU: 2x2 == 1-D bitwise
+    def run(mesh, **kw):
+        e = FLRoundEngine(model, adam(1e-3), fed, cfg(**kw), mesh=mesh)
+        assert e._tp_rows is False
+        e.run_round()
+        e.run_round()
+        return e
+
+    e22 = run(m22, tp_rows="auto")
+    e1d = run(make_mediator_mesh(2), tp_rows="auto")
+    for x, y in zip(jax.tree.leaves(e22.params), jax.tree.leaves(e1d.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert e22.num_round_traces == 1
+
+    # (c) gather-mode LoRA on the 2-D mesh: adapters stay bitwise the 1-D
+    # run's (the backbone operand is gathered, adapters are replicated),
+    # and the WAN ledger stays adapter-sized and layout-invariant
+    l22 = run(m22, tp_rows="auto", lora_rank=2)
+    l1d = run(make_mediator_mesh(2), tp_rows="auto", lora_rank=2)
+    for x, y in zip(jax.tree.leaves(jax.device_get(l22.adapters)),
+                    jax.tree.leaves(jax.device_get(l1d.adapters))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert l22.num_round_traces == 1
+    assert l22.comm.total_bytes == l1d.comm.total_bytes
+    assert l22.comm.wan_adapter_bytes == l22.comm.total_bytes
+    assert l22.comm.intra_pod_bytes > 0      # backbone gather is charged
+    print("OK")
+""")
+
+
+def test_tp_rows_forced_4dev(tmp_path):
+    """CPU contract on a real 4-device 2x2 mesh: True raises, "auto"
+    falls back to the (bitwise-pinned) gather oracle, with and without
+    LoRA adapters."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _FORCED_4DEV_SCRIPT],
+                          env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+
+
+@pytest.mark.skipif(jax.default_backend() not in ("tpu", "gpu"),
+                    reason="TP rows only compile on TPU/GPU (XLA-CPU "
+                           "partial-auto scan crash)")
+def test_tp_rows_matches_gather_oracle(tiny_federation):
+    """On a supported backend the true tensor-parallel row program must
+    reproduce the gather oracle's trajectory (allclose, not bitwise: the
+    TP matmuls tile differently) with the replica never materialized."""
+    nd = len(jax.devices())
+    if nd < 2 or nd % 2:
+        pytest.skip(f"needs an even device count >= 2, got {nd}")
+    model = emnist_cnn(8, image_size=16)
+    mesh = make_fl_mesh(mediator=nd // 2, model=2)
+
+    def run(mode):
+        e = FLRoundEngine(model, adam(1e-3), tiny_federation,
+                          _cfg(tp_rows=mode, row_exec="map",
+                               pad_mediators_to=nd // 2), mesh=mesh)
+        assert e._tp_rows is (mode is True)
+        e.run_round()
+        e.run_round()
+        return e
+
+    tp, oracle = run(True), run(False)
+    assert tp.num_round_traces == 1
+    for x, y in zip(jax.tree.leaves(tp.params), jax.tree.leaves(oracle.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
