@@ -1,0 +1,187 @@
+"""Two-process ``jax.distributed`` smoke: overlapped waves across hosts.
+
+CI's ``tier1-async-overlap`` job runs:
+
+    PYTHONPATH=src python -m benchmarks.distributed_smoke
+
+which launches itself twice as coordinator + worker (``--role child``),
+and on each process:
+
+* joins the coordination service (``launch.mesh.init_distributed``),
+  builds a process-local mesh, and constructs the same tiny federation
+  and engine from the same seeds;
+* runs 2 overlapped async rounds with a ``ProcessWaveDispatcher``: each
+  wave executes on exactly one process and its contribution crosses the
+  process boundary host-side through the coordination-service KV store
+  (cross-process XLA collectives are not implemented on the CPU
+  backend, so this is the only portable exchange);
+* asserts the acceptance contract -- the committed server params are
+  BITWISE identical across processes (exchanged via the KV store), both
+  processes fold every wave (commit logs match), and the WAN ledger is
+  process-count-invariant: every per-key total equals the single-process
+  run of the identical configuration, byte for byte.
+
+Exit status is nonzero on any violation or on a hung child (hard
+timeout), so the CI leg cannot wedge on a lost barrier.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import subprocess
+import sys
+
+CHILD_TIMEOUT_S = 420
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _run_rounds(dispatcher=None, telemetry=None):
+    """The workload both the child processes and the single-process
+    reference run: 2 overlapped async rounds on the tiny federation."""
+    import dataclasses
+
+    from repro.core import LocalSpec
+    from repro.core.async_engine import AsyncRoundEngine, AsyncSpec
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    from repro.core.staleness import StragglerSpec
+    from repro.data.federated import partition, EMNIST_LIKE
+    from repro.launch.mesh import make_mediator_mesh, process_local_mesh
+    from repro.models.cnn import emnist_cnn
+    from repro.optim import adam
+
+    spec = dataclasses.replace(EMNIST_LIKE, num_classes=8, image_size=16)
+    fed = partition(spec, num_clients=12, total_samples=600,
+                    test_samples=160, sizes="instagram",
+                    global_dist="letterfreq", local="random", seed=0,
+                    name="dist-smoke")
+    model = emnist_cnn(fed.num_classes, image_size=16)
+    cfg = EngineConfig.astraea(clients_per_round=6, gamma=3,
+                               local=LocalSpec(10, 1), seed=0,
+                               pad_mediators_to=3, donate_params=False,
+                               row_exec="map")
+    mesh = process_local_mesh() if dispatcher is not None \
+        else make_mediator_mesh(1)
+    eng = FLRoundEngine(model, adam(1e-3), fed, cfg, mesh=mesh,
+                        telemetry=telemetry)
+    aspec = AsyncSpec(staleness_bound=0, wave_size=1,
+                      straggler=StragglerSpec(model="lognormal", seed=3),
+                      dispatch="overlapped")
+    a = AsyncRoundEngine(eng, aspec, dispatcher=dispatcher)
+    for _ in range(2):
+        a.run_round()
+    a.flush()
+    return a
+
+
+def _child(args) -> int:
+    import jax
+    import numpy as np
+
+    from repro.launch.mesh import ProcessWaveDispatcher, init_distributed
+
+    assert init_distributed(args.coordinator, args.num_processes,
+                            args.process_id), "distributed init failed"
+    pid, nproc = jax.process_index(), jax.process_count()
+    print(f"[child {pid}] joined: {nproc} processes", flush=True)
+    disp = ProcessWaveDispatcher(timeout_ms=120_000)
+    a = _run_rounds(dispatcher=disp)
+
+    leaves = [np.asarray(x) for x in jax.tree.leaves(a.params)]
+    failures = []
+
+    def check(cond, msg):
+        print(f"[child {pid}] [{'ok' if cond else 'FAIL'}] {msg}",
+              flush=True)
+        if not cond:
+            failures.append(msg)
+
+    check(a.num_commits == 2, f"one S=0 commit per round, "
+                              f"got {a.num_commits}")
+    check(disp.num_published > 0 and disp.num_received > 0,
+          f"waves crossed the process boundary "
+          f"(pub={disp.num_published}, recv={disp.num_received})")
+
+    # params cross-check: everyone publishes, everyone diffs rank 0's
+    disp.publish(f"smoke-params-{pid}", leaves)
+    disp.barrier("params-ready")
+    ref = disp.receive("smoke-params-0")
+    same = all(np.array_equal(x, y) for x, y in zip(leaves, ref))
+    check(same, "server params bitwise identical across processes")
+
+    # WAN ledger process-count invariance: compare against rank 0's
+    # ledger AND (on rank 0) the single-process reference run
+    totals = a.comm.ledger_totals()
+    keys = sorted(totals)
+    vec = np.asarray([totals[k] for k in keys], np.float64)
+    disp.publish(f"smoke-ledger-{pid}", [vec])
+    disp.barrier("ledger-ready")
+    ref_vec = disp.receive("smoke-ledger-0")[0]
+    check(np.array_equal(vec, ref_vec),
+          "WAN ledger identical across processes")
+    if pid == 0:
+        solo = _run_rounds(dispatcher=None)
+        solo_totals = solo.comm.ledger_totals()
+        check(sorted(solo_totals) == keys and all(
+            solo_totals[k] == totals[k] for k in keys),
+            "WAN ledger equals the single-process run (process-count "
+            "invariant)")
+        solo_leaves = [np.asarray(x) for x in jax.tree.leaves(solo.params)]
+        check(all(np.array_equal(x, y)
+                  for x, y in zip(leaves, solo_leaves)),
+              "params bitwise equal to the single-process run")
+    disp.barrier("done")
+    if failures:
+        print(f"[child {pid}] {len(failures)} failure(s)", flush=True)
+        return 1
+    print(f"[child {pid}] all checks passed", flush=True)
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--role", choices=("parent", "child"), default="parent")
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-processes", type=int, default=2)
+    ap.add_argument("--process-id", type=int, default=None)
+    args = ap.parse_args()
+    if args.role == "child":
+        return _child(args)
+
+    coord = f"127.0.0.1:{_free_port()}"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    # one CPU device per process: the point is cross-PROCESS dispatch
+    env.pop("XLA_FLAGS", None)
+    procs = []
+    for pid in range(args.num_processes):
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", "benchmarks.distributed_smoke",
+             "--role", "child", "--coordinator", coord,
+             "--num-processes", str(args.num_processes),
+             "--process-id", str(pid)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True))
+    rc = 0
+    for pid, p in enumerate(procs):
+        try:
+            out, _ = p.communicate(timeout=CHILD_TIMEOUT_S)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            out, _ = p.communicate()
+            print(f"--- child {pid} TIMED OUT after {CHILD_TIMEOUT_S}s ---")
+            rc = 1
+        sys.stdout.write(out)
+        if p.returncode != 0:
+            rc = 1
+    print("distributed smoke:", "PASS" if rc == 0 else "FAIL")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

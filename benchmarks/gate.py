@@ -10,6 +10,12 @@ gate compares a freshly produced set against the baselines committed in
   tolerance is generous (3x); the gate catches order-of-magnitude
   regressions (a fused kernel silently falling back to a per-leaf or
   per-step launch pattern), not 10% jitter.
+* higher-is-better ratios (``*_speedup``, ``*_frac``) -- inverse ratio
+  check, ``fresh >= baseline / tolerance``: the measured wall-clock
+  overlap win (``wall_tta_speedup``, ``overlap_frac`` in ``async.json``)
+  may jitter on shared CPU runners but must not collapse -- an
+  overlapped dispatch silently degenerating to the blocking loop is a
+  regression even though no raw time field got 3x slower.
 * analytic fields (``flops``, ``*bytes*``, ``roofline_us``) and counters
   (``traces``, ``mediators``) -- EXACT. These are deterministic functions
   of the kernel's launch geometry; any drift means the kernel's cost
@@ -59,6 +65,11 @@ def _is_time_key(key: str) -> bool:
             or key.startswith("us_per"))
 
 
+def _is_ratio_key(key: str) -> bool:
+    """Higher-is-better measured ratios: gated from below."""
+    return key.endswith("_speedup") or key.endswith("_frac")
+
+
 def _exactly(a, b) -> bool:
     return bool(a == b) or (isinstance(a, float) and isinstance(b, float)
                             and math.isclose(a, b, rel_tol=1e-9))
@@ -103,6 +114,12 @@ def compare(fresh: dict, baseline: dict, *, tolerance: float = DEFAULT_TOLERANCE
                 if bv > 0 and fv > bv * tolerance:
                     errs.append(f"{p}: time regression {bv:.1f} -> {fv:.1f} "
                                 f"({fv / bv:.2f}x > {tolerance:.2f}x)")
+            elif _is_ratio_key(key):
+                if bv > 0 and fv < bv / tolerance:
+                    errs.append(f"{p}: measured ratio collapsed "
+                                f"{bv:.2f} -> {fv:.2f} (below baseline / "
+                                f"{tolerance:.2f} -- the win regressed, "
+                                "not just jitter)")
     return errs
 
 

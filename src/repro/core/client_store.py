@@ -21,13 +21,14 @@ sharded      ceil(K / n) * slice   per ROUND, serve-slice exchange over the
 host         U_cap * slice         per RESCHEDULE, host->device copy of the
              (U_cap = min(K, c))   <= c unique scheduled clients
 spilled      U_cap * slice         same stream as ``host``, but the packed
-             (+ U_cap-row RAM      federation lives in a disk/mmap tier (or
-             cache on the host)    a lazy per-client synthesizer) and the
-                                   NEXT reschedule's unique clients prefetch
-                                   on a background thread while the current
-                                   round computes; rows reused across
-                                   consecutive schedules come from the RAM
-                                   cache instead of disk
+             (+ LRU row cache      federation lives in a disk/mmap tier (or
+             on the host,          a lazy per-client synthesizer); up to
+             default 2*U_cap)      ``prefetch_depth`` future reschedules'
+                                   unique clients prefetch on background
+                                   threads while the current round computes,
+                                   and rows reused across schedules come
+                                   from the host-side LRU cache instead of
+                                   disk (LRU-evicted on overflow)
 ===========  ====================  =========================================
 
 ``replicated`` is PR-1's behavior: every device holds the whole federation
@@ -98,6 +99,7 @@ from __future__ import annotations
 import os
 import tempfile
 import threading
+from collections import deque
 from typing import Any
 
 import jax
@@ -263,8 +265,11 @@ class ClientStore:
         num_streams              host->device stream events     0
         prefetch_hits            background stages consumed     0
         prefetch_misses          stages discarded (mismatch)    0
-        cache_hit_rows           rows served from the RAM cache 0
+        prefetch_depth           queued background stages cap   0
+        cache_hit_rows           rows served from the LRU cache 0
         tier_rows                rows read from the spill tier  0
+        lru_rows                 LRU row-cache capacity (rows)  0
+        lru_evictions            rows evicted from the LRU      0
         spill_dir                mmap tier directory            None
         ======================== ============================== ==========
 
@@ -285,8 +290,11 @@ class ClientStore:
             "num_streams": getattr(self, "num_streams", 0),
             "prefetch_hits": getattr(self, "prefetch_hits", 0),
             "prefetch_misses": getattr(self, "prefetch_misses", 0),
+            "prefetch_depth": getattr(self, "prefetch_depth", 0),
             "cache_hit_rows": getattr(self, "cache_hit_rows", 0),
             "tier_rows": getattr(self, "tier_rows", 0),
+            "lru_rows": getattr(self, "lru_rows", 0),
+            "lru_evictions": getattr(self, "lru_evictions", 0),
             "spill_dir": getattr(getattr(self, "_src", None),
                                  "spill_dir", None),
         }
@@ -602,91 +610,169 @@ class HostStore(ClientStore):
     # stats(): streamed_bytes/num_streams ride the unified base schema
 
 
+class _RowLRU:
+    """Fixed-capacity per-client-id row cache with LRU eviction.
+
+    Rows live in preallocated host buffers; lookups and inserts are fully
+    vectorized (argsort/searchsorted over the resident ids), so staging
+    cost scales with the schedule, never with the cache. MAIN-THREAD
+    ONLY: the spill store's prefetch workers never touch the cache --
+    cached rows are copied out *before* a background stage is scheduled
+    -- so no lock is needed and eviction can never race a reader.
+    """
+
+    def __init__(self, rows: int, specs):
+        self.capacity = int(rows)
+        n = max(self.capacity, 1)
+        self._bufs = tuple(np.zeros((n,) + shape, dtype)
+                           for shape, dtype in specs)
+        self._ids = np.full(n, -1, np.int64)      # -1 = empty slot
+        self._last_used = np.zeros(n, np.int64)
+        self._tick = 0
+        self.evictions = 0
+
+    def lookup(self, uniq: np.ndarray, out: tuple) -> np.ndarray:
+        """Copy cached rows for ``uniq`` into the staging buffers ``out``
+        (capacity-padded, position-aligned with ``uniq``); returns the
+        boolean hit mask. Hits get their recency bumped."""
+        if self.capacity == 0 or uniq.size == 0:
+            return np.zeros(uniq.size, bool)
+        order = np.argsort(self._ids, kind="stable")
+        sorted_ids = self._ids[order]
+        pos = np.minimum(np.searchsorted(sorted_ids, uniq),
+                         sorted_ids.size - 1)
+        hit = sorted_ids[pos] == uniq
+        slots = order[pos[hit]]
+        where = np.flatnonzero(hit)
+        for buf, cbuf in zip(out, self._bufs):
+            buf[where] = cbuf[slots]
+        self._tick += 1
+        self._last_used[slots] = self._tick
+        return hit
+
+    def insert(self, ids: np.ndarray, rows: tuple) -> None:
+        """Insert rows for ``ids`` (unique), evicting least-recently-used
+        entries; ids already resident are skipped (a deep prefetch
+        pipeline can stage the same client twice before either stage is
+        consumed -- same bytes, so dropping the duplicate is free)."""
+        if self.capacity == 0 or ids.size == 0:
+            return
+        fresh = np.flatnonzero(~np.isin(ids, self._ids))
+        n = min(fresh.size, self.capacity)
+        if n == 0:
+            return
+        fresh = fresh[:n]
+        victims = np.argsort(self._last_used, kind="stable")[:n]
+        self.evictions += int((self._ids[victims] >= 0).sum())
+        self._ids[victims] = ids[fresh]
+        self._tick += 1
+        self._last_used[victims] = self._tick
+        for cbuf, rbuf in zip(self._bufs, rows):
+            cbuf[victims] = rbuf[fresh]
+
+
 class SpilledHostStore(HostStore):
-    """Disk/mmap-tier federation with a U_cap RAM cache + async prefetch.
+    """Disk/mmap-tier federation with an LRU row cache + pipelined prefetch.
 
     The ``host`` streaming contract, minus the host-RAM federation: rows
     come from a spill tier (``MmapClients``, or any lazy row source such
     as ``StreamingFederation``). Two mechanisms keep the stream off the
     round's critical path:
 
-    * **RAM cache**: the previous reschedule's staged ``U_cap`` rows are
-      kept; clients reused by the next schedule are copied from RAM
-      instead of re-read from the tier.
-    * **Async prefetch**: ``prefetch(ids)`` stages the *next* reschedule's
-      unique clients on a daemon thread (the engine calls it right after
-      packing the current schedule, so the disk reads overlap the round's
-      device compute). ``plan`` joins the thread and uses the staged
-      buffers when they match; a mismatched prefetch falls back to the
-      synchronous fetch -- same fetch path, so prefetched and synchronous
-      streams are bit-identical (asserted in tests).
+    * **LRU row cache**: ``lru_rows`` client rows (default ``2 * U_cap``,
+      deliberately larger than one schedule) are kept in host RAM keyed
+      by client id; clients reused by a later schedule are copied from
+      RAM instead of re-read from the tier, and the least-recently-used
+      rows are evicted on overflow (``stats()["lru_evictions"]``). This
+      generalizes the historical one-generation cache (the previous
+      staged buffers): reuse now survives an intervening schedule.
+    * **Pipelined prefetch**: ``prefetch(ids)`` stages a *future*
+      reschedule's unique clients on a daemon thread, and up to
+      ``prefetch_depth`` stages may be in flight at once -- the engine
+      fills the queue with its pre-drawn selections so the tier reads of
+      the next N reschedules overlap device compute (one reschedule of
+      lookahead stalls overlapped async waves, which burn through
+      schedules faster than a disk tier streams them). Cached rows are
+      copied out synchronously at ``prefetch`` call time (main thread);
+      only the tier reads run on the worker, so the LRU needs no lock.
+      ``plan`` consumes stages strictly in FIFO order: the front stage is
+      joined and used when its ids match, and a mismatched stage is
+      discarded (counted in ``prefetch_misses``) with a synchronous
+      fallback through the same fetch path -- so prefetched and
+      synchronous streams are bit-identical (asserted in tests).
     """
 
     policy = "spilled"
 
     def __init__(self, xs, ys, mask, mesh, capacity, *, source=None,
-                 spill_dir: str | None = None):
+                 spill_dir: str | None = None, prefetch_depth: int = 1,
+                 lru_rows: int | None = None):
         if source is None:
             source = MmapClients(xs, ys, mask, spill_dir)
         super().__init__(None, None, None, mesh, capacity, source=source)
-        self._cache: tuple[np.ndarray, tuple] | None = None  # (uniq, bufs)
-        self._inflight: tuple | None = None   # (thread, uniq, result box)
+        if prefetch_depth < 1:
+            raise ValueError("prefetch_depth must be >= 1")
+        if lru_rows is not None and lru_rows < 0:
+            raise ValueError("lru_rows must be >= 0")
+        self.prefetch_depth = int(prefetch_depth)
+        self.lru_rows = int(lru_rows) if lru_rows is not None \
+            else 2 * self._cap
+        self._lru = _RowLRU(self.lru_rows, self._src.row_specs)
+        # FIFO of background stages: (thread, uniq, box, bufs, hits, miss)
+        self._prefetched: deque = deque()
         self.prefetch_hits = 0
         self.prefetch_misses = 0
         self.cache_hit_rows = 0
         self.tier_rows = 0
 
-    def _fetch(self, uniq: np.ndarray, cache) -> tuple:
-        """Stage ``uniq`` rows, reusing the RAM cache where possible.
-        Returns ``(buffers, cached_rows, tier_rows)``."""
-        out = tuple(np.zeros((self._cap,) + shape, dtype)
-                    for shape, dtype in self._src.row_specs)
-        todo = np.ones(uniq.size, bool)
-        cached = 0
-        if cache is not None and uniq.size:
-            prev_uniq, prev_bufs = cache
-            common, pos_new, pos_prev = np.intersect1d(
-                uniq, prev_uniq, assume_unique=True, return_indices=True)
-            if common.size:
-                for buf, pbuf in zip(out, prev_bufs):
-                    buf[pos_new] = pbuf[pos_prev]
-                todo[pos_new] = False
-                cached = int(common.size)
-        miss = np.flatnonzero(todo)
+    @property
+    def lru_evictions(self) -> int:
+        return self._lru.evictions
+
+    def _stage(self, uniq: np.ndarray) -> tuple:
+        """Allocate staging buffers and serve the LRU hits (main thread).
+        Returns ``(bufs, cached_rows, miss_positions)`` -- the tier reads
+        for ``miss_positions`` are the caller's (sync or worker)."""
+        bufs = tuple(np.zeros((self._cap,) + shape, dtype)
+                     for shape, dtype in self._src.row_specs)
+        hit = self._lru.lookup(uniq, bufs)
+        return bufs, int(hit.sum()), np.flatnonzero(~hit)
+
+    def _read_tier(self, uniq: np.ndarray, bufs: tuple,
+                   miss: np.ndarray) -> None:
         if miss.size:
-            for buf, rows in zip(out, self._src.rows(uniq[miss])):
+            for buf, rows in zip(bufs, self._src.rows(uniq[miss])):
                 buf[miss] = rows
-        return out, cached, int(miss.size)
 
     def prefetch(self, ids: np.ndarray) -> None:
-        """Stage the next reschedule's unique clients in the background."""
-        self._join_inflight()
+        """Queue a background stage of a future reschedule's clients."""
         uniq = np.unique(np.asarray(ids))
         if uniq.size > self._cap:
             return                        # plan() will raise; nothing to stage
+        bufs, cached, miss = self._stage(uniq)
         box: dict = {}
-        cache = self._cache               # snapshot: plan() only swaps after join
 
         def work():
-            box["result"] = self._fetch(uniq, cache)
+            self._read_tier(uniq, bufs, miss)
+            box["done"] = True
 
         thread = threading.Thread(target=work, daemon=True,
                                   name="astraea-spill-prefetch")
         thread.start()
-        self._inflight = (thread, uniq, box)
+        self._prefetched.append((thread, uniq, box, bufs, cached, miss))
 
     def _join_inflight(self):
-        if self._inflight is not None:
-            self._inflight[0].join()
+        for entry in self._prefetched:
+            entry[0].join()
 
     def _staged_rows(self, uniq: np.ndarray) -> tuple:
-        bufs = None
-        if self._inflight is not None:
-            thread, pre_uniq, box = self._inflight
+        staged = None
+        while self._prefetched and staged is None:
+            thread, pre_uniq, box, bufs, cached, miss = \
+                self._prefetched.popleft()
             thread.join()
-            self._inflight = None
-            if "result" in box and np.array_equal(pre_uniq, uniq):
-                bufs, cached, tier = box["result"]
+            if box.get("done") and np.array_equal(pre_uniq, uniq):
+                staged = (bufs, cached, miss)
                 self.prefetch_hits += 1
                 self.telemetry.instant("store_prefetch", hit=True,
                                        rows=int(uniq.size))
@@ -694,20 +780,25 @@ class SpilledHostStore(HostStore):
                 self.prefetch_misses += 1
                 self.telemetry.instant("store_prefetch", hit=False,
                                        rows=int(uniq.size))
-        if bufs is None:
-            bufs, cached, tier = self._fetch(uniq, self._cache)
+        if staged is None:
+            bufs, cached, miss = self._stage(uniq)
+            self._read_tier(uniq, bufs, miss)
+            staged = (bufs, cached, miss)
+        bufs, cached, miss = staged
         self.cache_hit_rows += cached
-        self.tier_rows += tier
-        self._cache = (uniq, bufs)        # becomes next reschedule's RAM cache
+        self.tier_rows += int(miss.size)
+        if miss.size:                     # tier reads feed the LRU
+            self._lru.insert(uniq[miss], tuple(b[miss] for b in bufs))
         return bufs
 
-    # stats(): prefetch/cache/tier counters and spill_dir ride the
+    # stats(): prefetch/cache/tier/LRU counters and spill_dir ride the
     # unified base schema
 
 
 def build_client_store(policy: str, xs=None, ys=None, mask=None, mesh=None, *,
                        capacity: int | None = None, exchange: str = "ragged",
                        spill_dir: str | None = None, source=None,
+                       prefetch_depth: int = 1, lru_rows: int | None = None,
                        telemetry=None) -> ClientStore:
     """Build the packed client store under ``policy`` (see module docstring).
 
@@ -715,6 +806,8 @@ def build_client_store(policy: str, xs=None, ys=None, mask=None, mesh=None, *,
     (``host``/``spilled``) alternatively accept ``source``, a row source
     (``PackedClients``/``MmapClients``/``StreamingFederation``-like) that
     is never materialized as one array -- the million-client path.
+    ``prefetch_depth``/``lru_rows`` tune the spilled store's streaming
+    pipeline (ignored elsewhere; ``lru_rows=None`` = twice the capacity).
     ``telemetry`` optionally installs an ``obs.Telemetry`` handle (the
     adopting engine overwrites it with its own; default = no-op stubs).
     """
@@ -733,7 +826,9 @@ def build_client_store(policy: str, xs=None, ys=None, mask=None, mesh=None, *,
             store = HostStore(xs, ys, mask, mesh, capacity, source=source)
         else:
             store = SpilledHostStore(xs, ys, mask, mesh, capacity,
-                                     source=source, spill_dir=spill_dir)
+                                     source=source, spill_dir=spill_dir,
+                                     prefetch_depth=prefetch_depth,
+                                     lru_rows=lru_rows)
     else:
         raise ValueError(f"unknown client-store policy {policy!r}; "
                          f"expected one of {POLICIES}")

@@ -162,6 +162,7 @@ bit-identical to the pre-engine trainers on a single device.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, replace as dc_replace
 from typing import Any, Callable
 
@@ -283,6 +284,12 @@ class EngineConfig:
     # sharded store serve exchange: "ragged" (ppermute ring, exact bytes)
     # or "gather" (historical fixed-capacity all_gather); bit-identical
     store_exchange: str = "ragged"
+    # spilled-store streaming pipeline: how many reschedules ahead the
+    # engine pre-draws selections and hands them to store.prefetch (the
+    # rng draw ORDER is unchanged, so depth never perturbs trajectories),
+    # and the host-side LRU row-cache size in rows (None = 2x capacity)
+    store_prefetch_depth: int = 1
+    store_lru_rows: int | None = None
     # per-device mediator-row execution: "vmap" vectorizes rows (fastest on
     # few devices), "map" runs them serially with a batch-size-invariant
     # program, making trajectories bit-identical across ANY mesh size (XLA
@@ -332,6 +339,10 @@ class EngineConfig:
                              f"expected one of {EXCHANGES}")
         if self.row_exec not in ("vmap", "map"):
             raise ValueError(f"unknown row_exec {self.row_exec!r}")
+        if self.store_prefetch_depth < 1:
+            raise ValueError("store_prefetch_depth must be >= 1")
+        if self.store_lru_rows is not None and self.store_lru_rows < 0:
+            raise ValueError("store_lru_rows must be >= 0")
         if self.warp_impl not in augmentation.WARP_IMPLS:
             raise ValueError(f"unknown warp_impl {self.warp_impl!r}; "
                              f"expected one of {augmentation.WARP_IMPLS}")
@@ -399,7 +410,9 @@ class FLRoundEngine:
             xs, ys, mask = data.padded(pad)
             self.store = build_client_store(
                 cfg.store, xs, ys, mask, self.mesh, capacity=capacity,
-                exchange=cfg.store_exchange)
+                exchange=cfg.store_exchange,
+                prefetch_depth=cfg.store_prefetch_depth,
+                lru_rows=cfg.store_lru_rows)
         else:
             # streaming federation (row-source protocol, e.g.
             # data.synthetic.StreamingFederation): clients are fetched /
@@ -415,12 +428,16 @@ class FLRoundEngine:
                     f"streaming federation pad {data.pad} is not a multiple "
                     f"of batch_size {cfg.local.batch_size}")
             self.store = build_client_store(
-                cfg.store, mesh=self.mesh, capacity=capacity, source=data)
+                cfg.store, mesh=self.mesh, capacity=capacity, source=data,
+                prefetch_depth=cfg.store_prefetch_depth,
+                lru_rows=cfg.store_lru_rows)
         self.store.telemetry = self.telemetry
         self._raw_counts = data.client_counts()
         self._counts = self._raw_counts
         self._rng = np.random.default_rng(cfg.seed)
-        self._pending_sel: np.ndarray | None = None
+        # pre-drawn future selections, oldest first (ensure_schedule keeps
+        # this filled to the store's prefetch depth)
+        self._pending_sels: deque = deque()
 
         # ---- params: model-axis sharded at rest, replicated otherwise ----
         # On a 2-D mesh each device holds 1/model of every rule-table-
@@ -501,6 +518,9 @@ class FLRoundEngine:
             self.comm.plan_broadcast(plan_np.size, data.num_clients)
         self.history: list[dict] = []
         self.last_schedule_stats: dict | None = None
+        # the current schedule's client groups (schedule order) -- the
+        # client-level straggler model derives durations from membership
+        self.last_groups: list[list[int]] | None = None
         self.num_schedule_packs = 0             # host packing events (bench)
         self.num_round_traces = 0               # round_fn (re)compilations
         # one entry per (re)trace with its *reason* -- "initial" for each
@@ -509,6 +529,7 @@ class FLRoundEngine:
         self.trace_log: list[dict] = []
         self._schedule: tuple | None = None
         self._round = 0
+        self._wave_fns: dict[int, Callable] = {}    # width -> sliced wave_fn
         self._round_fn = self._build_round_fn(loss_fn)
 
     # ------------------------------------------------------------------
@@ -777,8 +798,58 @@ class FLRoundEngine:
             return trained_rows(state, data, plan, unperm, slot, keys, *extra)
 
         self.wave_fn = jax.jit(wave_fn)
+
+        def make_sliced_wave_fn(m_rows: int):
+            # the overlapped dispatch path (wave_fn_for): the SAME row
+            # program over an (m_rows, ...) slice of the packed schedule
+            # instead of the masked full padded-M stack -- a W-wave round
+            # then costs ~1x the sync round's row compute instead of Wx.
+            # Each width is its own entry point with its own "initial"
+            # trace, so the per-shape zero-retrace contract is auditable
+            # in trace_log.
+            tag = f"wave_fn[{m_rows}]"
+
+            def sliced(state, data, plan, unperm, slot, keys, *extra):
+                self._note_trace(tag)       # python: counts (re)traces
+                state, extra = _prep(state, extra)      # §8: model gather
+                return trained_rows(state, data, plan, unperm, slot, keys,
+                                    *extra)
+
+            return jax.jit(sliced)
+
+        self._make_wave_fn = make_sliced_wave_fn
         donate = (0,) if cfg.donate_params else ()
         return jax.jit(round_fn, donate_argnums=donate)
+
+    def wave_fn_for(self, m_rows: int) -> Callable:
+        """The sliced wave executable over ``m_rows`` schedule rows.
+
+        ``wave_fn`` restricted to one wave: plan/slot/keys arrive as
+        ``(m_rows, ...)`` row slices of the packed schedule (``m_rows`` a
+        multiple of the mediator mesh size, identity ``unperm``); the
+        data operands are the store's full resident buffers, unchanged.
+        One executable is compiled per distinct width and cached for the
+        engine's lifetime under trace tag ``wave_fn[m_rows]``.
+
+        Row-permuting stores (``sharded``) route each row's gathers by
+        its device position in the FULL schedule, so their rows cannot be
+        re-sliced without replanning -- callers must fall back to the
+        masked full-M ``wave_fn`` (the async engine does).
+        """
+        if self.store.permutes_rows:
+            raise ValueError(
+                f"the {self.store.policy!r} store routes gathers by row "
+                "position; sliced wave executables need a non-permuting "
+                "store (use the masked wave_fn instead)")
+        if m_rows < 1 or m_rows % self._msize:
+            raise ValueError(
+                f"wave width {m_rows} must be a positive multiple of the "
+                f"mediator mesh size {self._msize}")
+        fn = self._wave_fns.get(m_rows)
+        if fn is None:
+            fn = self._make_wave_fn(m_rows)
+            self._wave_fns[m_rows] = fn
+        return fn
 
     def _fold(self, state, agg) -> PyTree:
         """Fold the Eq. 6 aggregate into the server state -- the shared
@@ -855,6 +926,7 @@ class FLRoundEngine:
             if self.last_schedule_stats:
                 rsp.set(kld_mean=self.last_schedule_stats.get("kld_mean"),
                         num_mediators=len(groups))
+        self.last_groups = groups
         m_real = len(groups)
         m_pad = self.cfg.pad_mediators_to or m_real
         if m_pad < m_real:
@@ -920,24 +992,29 @@ class FLRoundEngine:
         """(Re)pack the gather schedule if this round needs one.
 
         With a prefetch-capable store (``spilled``) and per-round
-        rescheduling, the NEXT round's selection is pre-drawn here and
-        staged in the background, so the spill-tier reads overlap this
-        round's device compute. The rng draws happen in the same order
-        as the eager path (round r's selection is always the (r+1)-th
-        ``choice`` call), so trajectories are bitwise unchanged."""
+        rescheduling, the next rounds' selections are pre-drawn here --
+        up to the store's ``prefetch_depth`` ahead -- and staged in the
+        background, so the spill-tier reads overlap this round's device
+        compute. The rng draws happen in the same order as the eager
+        path (round r's selection is always the (r+1)-th ``choice``
+        call; depth only changes how early the calls are issued), so
+        trajectories are bitwise unchanged at any depth."""
         cfg = self.cfg
         c = min(cfg.clients_per_round, self.data.num_clients)
         if cfg.reschedule_every_round or self._schedule is None:
-            if self._pending_sel is not None:
-                sel, self._pending_sel = self._pending_sel, None
+            if self._pending_sels:
+                sel = self._pending_sels.popleft()
             else:
                 sel = self._rng.choice(self.data.num_clients, size=c,
                                        replace=False)
             self._schedule = self._pack_schedule(sel)
             if cfg.reschedule_every_round and hasattr(self.store, "prefetch"):
-                self._pending_sel = self._rng.choice(
-                    self.data.num_clients, size=c, replace=False)
-                self.store.prefetch(self._pending_sel)
+                depth = max(1, int(getattr(self.store, "prefetch_depth", 1)))
+                while len(self._pending_sels) < depth:
+                    nxt = self._rng.choice(self.data.num_clients, size=c,
+                                           replace=False)
+                    self._pending_sels.append(nxt)
+                    self.store.prefetch(nxt)
         return self._schedule
 
     def run_round(self) -> None:

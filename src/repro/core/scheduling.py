@@ -231,6 +231,16 @@ def partition_waves(durations: np.ndarray, wave_size: int
     does, so sorted chunking minimizes the sum of wave completion times
     over all contiguous partitions of a fixed wave size.
 
+    This composes with *client*-level heterogeneity without any code
+    here changing: a ``StragglerSpec(level="client")`` model derives
+    each mediator's duration as the sum of its members' factors
+    (``StragglerModel.durations_for_groups``), so a slow *device* drags
+    whichever mediator Alg. 3 packed it into toward the late waves --
+    speed-aware wave placement stacks on top of KLD-greedy packing
+    rather than perturbing it. With all clients at unit speed the
+    durations tie everywhere and the stable sort reproduces the
+    historical mediator-only ordering bitwise.
+
     Args:
       durations: ``(M,)`` simulated per-mediator training times
         (schedule order; see ``core/staleness.py``).

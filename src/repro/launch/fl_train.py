@@ -21,7 +21,7 @@ import repro.configs as C
 from repro.core import scheduling
 from repro.core.comm import CommMeter
 from repro.launch.compat import use_mesh
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import init_distributed, make_host_mesh
 from repro.launch.sharding import param_shardings, TRAIN_RULES
 from repro.launch.steps import make_fl_round
 from repro.models import layers as L
@@ -66,16 +66,45 @@ def main():
                          "everything, unset = full-delta exchange")
     ap.add_argument("--lora-alpha", type=float, default=None,
                     help="LoRA merge scale alpha (default: rank, i.e. 1.0)")
+    ap.add_argument("--coordinator", default=None,
+                    help="jax.distributed coordinator address "
+                         "(host:port); enables the multi-process runtime "
+                         "-- each process trains on a process-local mesh "
+                         "and the WAN ledger stays process-count-"
+                         "invariant (env: JAX_COORDINATOR_ADDRESS)")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="total jax.distributed processes "
+                         "(env: JAX_NUM_PROCESSES)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's rank (env: JAX_PROCESS_ID)")
     args = ap.parse_args()
+
+    distributed = init_distributed(args.coordinator, args.num_processes,
+                                   args.process_id)
+    if distributed:
+        print(f"distributed: process {jax.process_index()}/"
+              f"{jax.process_count()} with {len(jax.local_devices())} "
+              f"local device(s)")
 
     cfg = C.reduced(C.get(args.arch))
     if args.model_parallel > 1:
-        nd = len(jax.devices())
+        # under jax.distributed, programs stay on this process's own
+        # devices (cross-process XLA collectives are unavailable on CPU)
+        devs = jax.local_devices() if distributed else jax.devices()
+        nd = len(devs)
         if nd % args.model_parallel:
             raise SystemExit(f"{nd} devices not divisible by "
                              f"--model-parallel {args.model_parallel}")
-        mesh = jax.make_mesh((nd // args.model_parallel, args.model_parallel),
-                             ("data", "model"))
+        from jax.sharding import Mesh
+        mesh = Mesh(np.asarray(devs).reshape(nd // args.model_parallel,
+                                             args.model_parallel),
+                    ("data", "model"))
+    elif distributed:
+        # 1x1 over a LOCAL device: jax.make_mesh would grab the global
+        # device list, whose head lives on process 0 for everyone else
+        from jax.sharding import Mesh
+        mesh = Mesh(np.asarray(jax.local_devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
     else:
         mesh = make_host_mesh()
     n_mediators = int(np.prod([mesh.shape[a] for a in mesh.axis_names

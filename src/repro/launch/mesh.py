@@ -1,4 +1,4 @@
-"""Production mesh construction.
+"""Production mesh construction and the multi-process runtime.
 
 A function, not a module-level constant, so importing this module never
 touches jax device state (smoke tests must keep seeing 1 CPU device).
@@ -6,12 +6,26 @@ touches jax device state (smoke tests must keep seeing 1 CPU device).
 Production target: TPU v5e pods.
   single pod: (data=16, model=16)            -- 256 chips
   multi pod:  (pod=2, data=16, model=16)     -- 512 chips
+
+Multi-process execution (``jax.distributed``): ``init_distributed``
+joins the coordination service, ``process_local_mesh`` builds a mesh
+over this process's own devices only, and ``ProcessWaveDispatcher``
+shards async waves across processes, exchanging the wave payloads
+host-side through the coordination-service KV store. The process-local
+mesh is deliberate: cross-process XLA collectives are not implemented on
+the CPU backend, so each process keeps its collectives in-process and
+the wave results -- small (M, ...) stacks, not per-step activations --
+ride the KV store. On a real TPU multi-host deployment the same
+dispatcher composes with global meshes; the CPU smoke leg
+(benchmarks/distributed_smoke.py) proves the protocol.
 """
 from __future__ import annotations
 
+import io
 import os
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -117,6 +131,126 @@ def replicated_sharding(mesh):
     """Every device holds the full array (params, small plan tensors)."""
     from jax.sharding import NamedSharding, PartitionSpec
     return NamedSharding(mesh, PartitionSpec())
+
+
+def init_distributed(coordinator: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None) -> bool:
+    """Join (or skip) the ``jax.distributed`` coordination service.
+
+    Arguments fall back to the standard ``JAX_COORDINATOR_ADDRESS`` /
+    ``JAX_NUM_PROCESSES`` / ``JAX_PROCESS_ID`` env knobs. A single-process
+    configuration (no coordinator, or ``num_processes <= 1``) is a no-op
+    returning ``False``; repeated initialization is also a no-op, so
+    trainers can call this unconditionally.
+    """
+    coordinator = coordinator or os.environ.get("JAX_COORDINATOR_ADDRESS")
+    if num_processes is None:
+        num_processes = int(os.environ.get("JAX_NUM_PROCESSES", "1") or "1")
+    if process_id is None:
+        process_id = int(os.environ.get("JAX_PROCESS_ID", "0") or "0")
+    if not coordinator or num_processes <= 1:
+        return False
+    if coordination_client() is not None:      # already joined
+        return True
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True
+
+
+def coordination_client():
+    """The live coordination-service client, or ``None`` when this process
+    runs undistributed. The client is the host-side KV store + barrier the
+    wave dispatcher exchanges payloads through -- it works across
+    processes on every backend, including CPU where cross-process XLA
+    collectives do not."""
+    from jax._src import distributed as _dist
+    return _dist.global_state.client
+
+
+def process_local_mesh(model: int = 1):
+    """Per-process ``(mediator, model)``/1-D mesh over *local* devices.
+
+    Under ``jax.distributed`` each process sees the global device set, but
+    programs placed on remote devices need cross-process collectives the
+    CPU backend lacks. The async wave dispatcher therefore gives every
+    process its own mesh over ``jax.local_devices()`` -- wave executables
+    run entirely in-process and results cross process boundaries
+    host-side (``ProcessWaveDispatcher``). Shape semantics match
+    :func:`make_fl_mesh` restricted to local devices.
+    """
+    from jax.sharding import Mesh
+    model = int(model)
+    if model < 1:
+        raise ValueError(f"model axis size must be >= 1, got {model}")
+    local = jax.local_devices()
+    if model == 1:
+        return Mesh(np.asarray(local).reshape(len(local)), ("mediator",))
+    if len(local) % model:
+        raise ValueError(f"{len(local)} local devices are not divisible "
+                         f"by a model axis of {model}")
+    return Mesh(np.asarray(local).reshape(len(local) // model, model),
+                ("mediator", "model"))
+
+
+class ProcessWaveDispatcher:
+    """Round-robin wave ownership + host-side payload exchange.
+
+    The async engine asks :meth:`owner_of` which process executes wave
+    ``w`` of round ``r``; the owner runs it on its process-local mesh and
+    :meth:`publish`-es the resulting arrays through the coordination
+    KV store, every other process :meth:`receive`-s them. Ownership is a
+    pure function of ``(round, wave)``, so no coordination is needed to
+    agree on it, and every process books identical comm charges -- the
+    WAN ledger stays process-count-invariant by construction
+    (benchmarks/distributed_smoke.py asserts it).
+
+    Payloads are ``np.savez``-framed (ordered, dtype/shape-preserving,
+    no pickling); keys are namespaced per round/wave and never reused, so
+    late readers always see exactly the bytes the owner wrote.
+    """
+
+    def __init__(self, client=None, *, process_index: int | None = None,
+                 num_processes: int | None = None,
+                 timeout_ms: int = 120_000):
+        self.client = client if client is not None else coordination_client()
+        if self.client is None:
+            raise ValueError("ProcessWaveDispatcher needs a live "
+                             "jax.distributed coordination client "
+                             "(call init_distributed first)")
+        self.process_index = jax.process_index() \
+            if process_index is None else int(process_index)
+        self.num_processes = jax.process_count() \
+            if num_processes is None else int(num_processes)
+        if self.num_processes < 1:
+            raise ValueError("num_processes must be >= 1")
+        self.timeout_ms = int(timeout_ms)
+        self.num_published = 0
+        self.num_received = 0
+
+    def owner_of(self, round_idx: int, wave_idx: int) -> int:
+        """Rotating round-robin: waves of one round spread across
+        processes, and the offset rotates per round so short rounds do
+        not starve the high-index processes."""
+        return (int(round_idx) + int(wave_idx)) % self.num_processes
+
+    def publish(self, tag: str, arrays) -> None:
+        buf = io.BytesIO()
+        np.savez(buf, *[np.asarray(a) for a in arrays])
+        self.client.key_value_set_bytes(f"astraea/{tag}", buf.getvalue())
+        self.num_published += 1
+
+    def receive(self, tag: str) -> list[np.ndarray]:
+        raw = self.client.blocking_key_value_get_bytes(
+            f"astraea/{tag}", self.timeout_ms)
+        with np.load(io.BytesIO(raw), allow_pickle=False) as z:
+            out = [z[f"arr_{i}"] for i in range(len(z.files))]
+        self.num_received += 1
+        return out
+
+    def barrier(self, name: str) -> None:
+        self.client.wait_at_barrier(f"astraea/{name}", self.timeout_ms)
 
 
 def mediator_sharding(mesh):

@@ -214,6 +214,21 @@ class Telemetry:
             m.gauge("astraea_wave_barrier_time").set(ws["barrier_time"])
             m.gauge("astraea_wave_blocked_time_saved"
                     ).set(ws["blocked_time_saved"])
+        # dispatch-pipeline surfaces (overlapped mode; zeros when masked)
+        m.gauge("astraea_wave_overlap_frac",
+                "fraction of wave dispatches issued while the previous "
+                "wave's result was still in flight"
+                ).set(aengine.overlap_frac)
+        m.gauge("astraea_staleness_bound",
+                "staleness bound S governing the next commit (adaptive "
+                "EWMA bound when configured, else the fixed knob)"
+                ).set(aengine.staleness_bound)
+        m.counter("astraea_pipeline_syncs_total",
+                  "synchronize() pipeline drains (eval/flush boundaries)"
+                  ).set_total(aengine.num_syncs)
+        m.counter("astraea_commit_wait_seconds_total",
+                  "host wall seconds spent draining the commit pipeline"
+                  ).set_total(aengine.wall_commit_wait_s)
         return self.observe_round(aengine.engine, duration_s=duration_s)
 
     # ---- artifacts ----

@@ -1,0 +1,410 @@
+"""Overlapped async dispatch, adaptive staleness, client-level stragglers.
+
+The tentpole acceptance claims of the overlapped wave pipeline
+(core/async_engine.py, "overlapped" dispatch):
+
+* S=0 overlapped dispatch is BITWISE identical to the synchronous engine
+  under the batch-size-invariant row executor (``row_exec="map"``), on 1
+  and 4 forced host devices, across the replicated / sharded / spilled
+  stores -- with one "initial" trace per wave width and ZERO retraces;
+* the adaptive staleness controller (EWMA over observed commit lags)
+  reproduces the fixed-S trajectory bitwise under constant lags, and its
+  bound is monotone and clamped;
+* client-level straggler factors co-schedule slow *devices* into late
+  waves, and the all-unit-speed client model reproduces the historical
+  mediator-level wave ordering bitwise;
+* the spilled store's depth-N prefetch + LRU row cache never perturb
+  trajectories (RNG draw order is preserved by the pre-draw deque);
+* zero-round edge cases (flush before any round, ``fit(0)``) are no-ops.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LocalSpec, scheduling
+from repro.core.async_engine import AsyncRoundEngine, AsyncSpec
+from repro.core.engine import EngineConfig, FLRoundEngine
+from repro.core.staleness import (AdaptiveStaleness, AdaptiveStalenessSpec,
+                                  StragglerModel, StragglerSpec)
+from repro.launch.mesh import make_mediator_mesh
+from repro.models.cnn import emnist_cnn
+from repro.optim import adam
+
+
+@pytest.fixture(scope="module")
+def model(tiny_federation):
+    return emnist_cnn(tiny_federation.num_classes, image_size=16)
+
+
+def _params_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _cfg(**kw):
+    base = dict(clients_per_round=6, gamma=3, local=LocalSpec(10, 1),
+                seed=0, pad_mediators_to=3, donate_params=False,
+                reschedule_every_round=True, row_exec="map")
+    base.update(kw)
+    return EngineConfig.astraea(**base)
+
+
+# ----------------------------------------------------------------------
+# adaptive staleness controller
+# ----------------------------------------------------------------------
+def test_adaptive_ewma_monotone_toward_constant_lag():
+    a = AdaptiveStaleness(AdaptiveStalenessSpec(s_min=0, s_max=8, beta=0.5))
+    prev, bounds = a.ewma, []
+    for _ in range(30):
+        a.observe(3.0)
+        assert prev < a.ewma <= 3.0      # monotone from below, never past
+        prev = a.ewma
+        bounds.append(a.bound)
+    assert bounds == sorted(bounds)      # the derived bound is monotone too
+    assert bounds[-1] == 3               # ceil of the converged estimate
+    # and monotone from above when lags drop (enough steps for the decay
+    # toward 1.0 to shrink past the bound's 1e-9 ceil tolerance; once the
+    # float fixed point at exactly 1.0 is reached the estimate holds there)
+    for _ in range(60):
+        a.observe(1.0)
+        assert 1.0 <= a.ewma <= prev
+        assert a.ewma < prev or a.ewma == 1.0
+        prev = a.ewma
+    assert a.bound == 1
+
+
+def test_adaptive_bound_clamps_to_min_max():
+    a = AdaptiveStaleness(AdaptiveStalenessSpec(s_min=1, s_max=2, beta=1.0))
+    assert a.bound == 1                  # ewma 0 clamps up to s_min
+    a.observe(7.0)                       # beta=1: ewma jumps to the lag
+    assert a.bound == 2                  # clamps down to s_max
+    a.observe(0.0)
+    assert a.bound == 1
+
+
+def test_adaptive_constant_lag_is_bitwise_fixed_point():
+    """lag == ewma gives a delta of exactly 0.0: the estimate (and hence
+    the bound) never drifts under a constant lag stream -- the property
+    that makes adaptive-S reproduce fixed-S bitwise."""
+    a = AdaptiveStaleness(AdaptiveStalenessSpec(init=2.0, beta=0.25))
+    for _ in range(100):
+        a.observe(2.0)
+        assert a.ewma == 2.0             # exact, not approximate
+    assert a.bound == 2
+    z = AdaptiveStaleness(AdaptiveStalenessSpec(init=0.0))
+    for _ in range(100):
+        z.observe(0.0)
+        assert z.ewma == 0.0
+    assert z.bound == 0
+
+
+def test_adaptive_spec_validation():
+    with pytest.raises(ValueError, match="beta"):
+        AdaptiveStalenessSpec(beta=0.0)
+    with pytest.raises(ValueError, match="s_max"):
+        AdaptiveStalenessSpec(s_min=3, s_max=1)
+    with pytest.raises(ValueError, match="init"):
+        AdaptiveStalenessSpec(init=-0.5)
+    a = AdaptiveStaleness(AdaptiveStalenessSpec())
+    with pytest.raises(ValueError, match="lag"):
+        a.observe(-1.0)
+
+
+def test_adaptive_s_reproduces_fixed_s_bitwise(model, tiny_federation):
+    """No stragglers => every commit lag is 0 => the adaptive bound sits
+    at 0 and the whole trajectory equals the fixed S=0 run bitwise."""
+    cfg = _cfg()
+    runs = []
+    for adaptive in (None, AdaptiveStalenessSpec(s_min=0, s_max=4,
+                                                 beta=0.25, init=0.0)):
+        eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                            mesh=make_mediator_mesh(1))
+        a = AsyncRoundEngine(eng, AsyncSpec(
+            staleness_bound=0, wave_size=1,
+            straggler=StragglerSpec(model="none"), adaptive=adaptive))
+        for _ in range(3):
+            a.run_round()
+        runs.append(a)
+    _params_bitwise(runs[0].params, runs[1].params)
+    assert runs[1].staleness_bound == 0
+    assert runs[1]._adaptive.num_observed > 0
+    # every commit logged the bound that governed it
+    assert all(c["staleness_bound"] == 0 for c in runs[1].commit_log)
+
+
+# ----------------------------------------------------------------------
+# client-level straggler model + wave co-scheduling
+# ----------------------------------------------------------------------
+def test_client_level_model_needs_num_clients():
+    spec = StragglerSpec(model="fixed", level="client")
+    with pytest.raises(ValueError, match="num_clients"):
+        StragglerModel(spec, num_slots=4)
+    m = StragglerModel(spec, num_slots=4, num_clients=12)
+    with pytest.raises(ValueError, match="durations_for_groups"):
+        m.durations(np.ones(4))
+    med = StragglerModel(StragglerSpec(model="none"), num_slots=4)
+    with pytest.raises(ValueError, match="level='client'"):
+        med.durations_for_groups([[0, 1]])
+
+
+def test_slow_clients_drag_their_mediators_into_late_waves():
+    spec = StragglerSpec(model="fixed", straggler_frac=0.25, slowdown=8.0,
+                         seed=1, level="client")
+    m = StragglerModel(spec, num_slots=4, num_clients=12)
+    slow = set(np.flatnonzero(m.factors > 1.0).tolist())
+    assert len(slow) == 3                # round(0.25 * 12)
+    groups = [[0, 1, 2], [3, 4, 5], [6, 7, 8], [9, 10, 11]]
+    durations = m.durations_for_groups(groups, epochs=2)
+    waves, _ = scheduling.partition_waves(durations, 1)
+    # whichever mediators hold slow clients come strictly after the
+    # all-fast mediators in the wave order
+    has_slow = [bool(slow & set(g)) for g in groups]
+    order = [int(w[0]) for w in waves]
+    fast_positions = [order.index(g) for g in range(4) if not has_slow[g]]
+    slow_positions = [order.index(g) for g in range(4) if has_slow[g]]
+    assert max(fast_positions) < min(slow_positions)
+
+
+def test_unit_speed_clients_reproduce_mediator_ordering_bitwise():
+    """All-equal-speed client factors degenerate to the historical
+    mediator-level ordering: identical duration vectors (the float sum of
+    k ones is exactly k), identical waves."""
+    groups = [[0, 1, 2], [3, 4], [5, 6, 7], [8]]
+    cl = StragglerModel(StragglerSpec(model="none", level="client"),
+                        num_slots=4, num_clients=9)
+    med = StragglerModel(StragglerSpec(model="none"), num_slots=4)
+    d_client = cl.durations_for_groups(groups, epochs=2)
+    work = np.asarray([len(g) for g in groups], np.float64) * 2
+    d_med = med.durations(work)
+    np.testing.assert_array_equal(d_client, d_med)
+    w_client, _ = scheduling.partition_waves(d_client, 2)
+    w_med, _ = scheduling.partition_waves(d_med, 2)
+    assert [list(map(int, w)) for w in w_client] == \
+        [list(map(int, w)) for w in w_med]
+
+
+def test_client_level_async_rounds_run(model, tiny_federation):
+    """End-to-end: the async engine derives durations from the schedule's
+    group membership (engine.last_groups) under level='client'."""
+    cfg = _cfg()
+    eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                        mesh=make_mediator_mesh(1))
+    a = AsyncRoundEngine(eng, AsyncSpec(
+        staleness_bound=1, wave_size=1,
+        straggler=StragglerSpec(model="fixed", straggler_frac=0.25,
+                                slowdown=4.0, seed=0, level="client")))
+    for _ in range(2):
+        a.run_round()
+    assert a.num_commits == 2
+    assert a._straggler.factors.shape[0] == tiny_federation.num_clients
+    assert eng.last_groups is not None
+    # durations actually reflect membership sums, not unit slot work
+    d = a._straggler.durations_for_groups(eng.last_groups,
+                                          cfg.mediator_epochs)
+    assert d.shape[0] == len(eng.last_groups)
+
+
+# ----------------------------------------------------------------------
+# overlapped dispatch: bitwise pins + pipeline observability
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("store", ["replicated", "sharded"])
+def test_overlapped_s0_bitwise_matches_sync(model, tiny_federation, store):
+    """Overlapped dispatch (sliced waves + pipelined commits; masked
+    fallback under the row-permuting sharded store) reproduces the sync
+    engine bitwise at S=0, across per-round reschedules, with zero
+    retraces."""
+    cfg = _cfg(store=store)
+    sync = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                         mesh=make_mediator_mesh(1))
+    for _ in range(3):
+        sync.run_round()
+    eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                        mesh=make_mediator_mesh(1))
+    a = AsyncRoundEngine(eng, AsyncSpec(
+        staleness_bound=0, wave_size=1,
+        straggler=StragglerSpec(model="lognormal", seed=3),
+        dispatch="overlapped"))
+    assert a._pipelined
+    assert a._sliced == (store == "replicated")
+    for _ in range(3):
+        a.run_round()
+    a.flush()
+    _params_bitwise(sync.params, a.params)
+    # one "initial" trace per wave width, zero retraces across
+    # reschedules -- widths recur, executables are cached
+    assert all(t["reason"] == "initial" for t in eng.trace_log), \
+        eng.trace_log
+    fns = [t["fn"] for t in eng.trace_log]
+    assert len(fns) == len(set(fns))
+    if store == "replicated":
+        assert all(f.startswith("wave_fn[") for f in fns)
+    assert a.num_dispatches > 0
+
+
+def test_overlapped_s1_bitwise_matches_masked(model, tiny_federation):
+    """Sliced execution is a pure dispatch change: at S=1 under a
+    straggler fleet, overlapped and masked runs commit identical bits
+    round for round (row_exec='map')."""
+    cfg = _cfg()
+    spec = dict(staleness_bound=1, wave_size=1,
+                straggler=StragglerSpec(model="fixed", straggler_frac=0.34,
+                                        slowdown=4.0, seed=0))
+    runs = []
+    for dispatch in ("masked", "overlapped"):
+        eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                            mesh=make_mediator_mesh(1))
+        a = AsyncRoundEngine(eng, AsyncSpec(dispatch=dispatch, **spec))
+        for _ in range(3):
+            a.run_round()
+        a.flush()
+        runs.append(a)
+    _params_bitwise(runs[0].params, runs[1].params)
+    assert runs[0].commit_log[-1]["staleness"] == \
+        runs[1].commit_log[-1]["staleness"]
+
+
+def test_blocking_baseline_reports_zero_overlap(model, tiny_federation):
+    eng = FLRoundEngine(model, adam(1e-3), tiny_federation, _cfg(),
+                        mesh=make_mediator_mesh(1))
+    a = AsyncRoundEngine(eng, AsyncSpec(
+        staleness_bound=0, wave_size=1,
+        straggler=StragglerSpec(model="lognormal", seed=3),
+        block_each_wave=True))
+    a.run_round()
+    assert a.overlap_frac == 0.0
+    assert a.num_dispatches >= 2
+    waited = a.synchronize()
+    assert waited >= 0.0 and a.num_syncs == 1
+
+
+def test_async_spec_dispatch_validation():
+    with pytest.raises(ValueError, match="dispatch"):
+        AsyncSpec(dispatch="bogus")
+    with pytest.raises(ValueError, match="blocking baseline"):
+        AsyncSpec(dispatch="overlapped", block_each_wave=True)
+
+
+def test_zero_round_guards(model, tiny_federation):
+    """flush() before any round and fit(0) are no-ops; sim_speedup is
+    exactly 1.0 with no commits (regression: was 0/eps = 0x)."""
+    eng = FLRoundEngine(model, adam(1e-3), tiny_federation, _cfg(),
+                        mesh=make_mediator_mesh(1))
+    a = AsyncRoundEngine(eng, AsyncSpec())
+    assert a.sim_speedup == 1.0
+    a.flush()                            # nothing pending, nothing folded
+    assert a.num_commits == 0 and a.virtual_time == 0.0
+    assert a.fit(0) == []
+    assert a.history == []
+
+
+# ----------------------------------------------------------------------
+# spilled store: depth-N prefetch + LRU cache
+# ----------------------------------------------------------------------
+def test_spilled_depth_and_lru_do_not_perturb_trajectories(
+        model, tiny_federation):
+    """Deeper pre-draw only changes WHEN selection draws are issued, not
+    their order, and the LRU is a read-through cache -- trajectories stay
+    bitwise across depth/lru settings, while the stats schema reports the
+    knobs."""
+    runs = {}
+    for depth, lru in ((1, None), (3, None), (2, 1)):
+        cfg = _cfg(store="spilled", store_prefetch_depth=depth,
+                   store_lru_rows=lru)
+        eng = FLRoundEngine(model, adam(1e-3), tiny_federation, cfg,
+                            mesh=make_mediator_mesh(1))
+        for _ in range(3):
+            eng.run_round()
+        runs[(depth, lru)] = eng
+    base = runs[(1, None)]
+    for key, eng in runs.items():
+        _params_bitwise(base.params, eng.params)
+        st = eng.store.stats()
+        assert st["prefetch_depth"] == key[0]
+        assert "lru_rows" in st and "lru_evictions" in st
+    # the deep pipeline actually queued ahead: depth-3 run prefetched
+    # every subsequent schedule and a tiny LRU was forced to evict
+    deep = runs[(3, None)].store
+    assert deep.prefetch_depth == 3 and deep.prefetch_hits >= 2
+    assert runs[(2, 1)].store.stats()["lru_evictions"] > 0
+    assert base.store.stats()["lru_rows"] == 2 * base.store._cap
+
+
+def test_engine_validates_store_pipeline_knobs(model, tiny_federation):
+    with pytest.raises(ValueError, match="prefetch"):
+        _cfg(store_prefetch_depth=0)
+    with pytest.raises(ValueError, match="lru"):
+        _cfg(store_lru_rows=-1)
+
+
+# ----------------------------------------------------------------------
+# 4-device pin: overlapped S=0 bitwise vs sync across all three stores
+# ----------------------------------------------------------------------
+_OVERLAP_4DEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.core import LocalSpec
+    from repro.core.async_engine import AsyncRoundEngine, AsyncSpec
+    from repro.core.engine import EngineConfig, FLRoundEngine
+    from repro.core.staleness import StragglerSpec
+    from repro.data.federated import partition, EMNIST_LIKE
+    from repro.launch.mesh import make_mediator_mesh
+    from repro.models.cnn import emnist_cnn
+    from repro.optim import adam
+
+    spec = dataclasses.replace(EMNIST_LIKE, num_classes=8, image_size=16)
+    fed = partition(spec, num_clients=12, total_samples=600, test_samples=160,
+                    sizes="instagram", global_dist="letterfreq",
+                    local="random", seed=0, name="tiny")
+    model = emnist_cnn(8, image_size=16)
+    aspec = AsyncSpec(staleness_bound=0, wave_size=1,
+                      straggler=StragglerSpec(model="lognormal", seed=3),
+                      dispatch="overlapped")
+    for store in ("replicated", "sharded", "spilled"):
+        cfg = EngineConfig.astraea(clients_per_round=6, gamma=3,
+                                   local=LocalSpec(10, 1), seed=0,
+                                   pad_mediators_to=4, donate_params=False,
+                                   reschedule_every_round=True,
+                                   row_exec="map", store=store)
+        sync = FLRoundEngine(model, adam(1e-3), fed, cfg,
+                             mesh=make_mediator_mesh(4))
+        sync.run_round()
+        sync.run_round()
+        eng = FLRoundEngine(model, adam(1e-3), fed, cfg,
+                            mesh=make_mediator_mesh(4))
+        a = AsyncRoundEngine(eng, aspec)
+        a.run_round()
+        a.run_round()
+        a.flush()
+        for x, y in zip(jax.tree.leaves(sync.params),
+                        jax.tree.leaves(a.params)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        bad = [t for t in eng.trace_log if t["reason"] != "initial"]
+        assert not bad, (store, eng.trace_log)
+        print(store, "ok:", sorted({t["fn"] for t in eng.trace_log}))
+    print("OK")
+""")
+
+
+def test_overlapped_multi_device_all_stores(tmp_path):
+    """Pipelined S=0 == sync, bitwise, on a real 4-device mediator mesh
+    across replicated / sharded / spilled stores -- one trace per wave
+    width, zero retraces. Subprocess: the device count must be forced
+    before jax initializes."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _OVERLAP_4DEV_SCRIPT],
+                          env=env, capture_output=True, text=True,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "OK" in proc.stdout

@@ -25,6 +25,8 @@ EVIDENCE = {
                    "achieved_frac": 2.9e-5},
     "nested": {"inner": {"kernel_us": 10.0, "store_bytes": 4096,
                          "traces": 1, "ok": True}},
+    "wall_clock": {"wall_tta_speedup": 4.0, "overlap_frac": 0.8,
+                   "wall_time_to_target_s": 9.0},
     "_meta": {"backend": "cpu", "interpret": True, "device_count": 1,
               "jax_version": "0.4.37"},
 }
@@ -63,6 +65,19 @@ def test_gate_fails_on_time_regression(tmp_path):
     def slow(ev):
         ev["nested"]["inner"]["kernel_us"] = 31.0   # 3.1x > 3x
     assert _run(tmp_path, slow) == 1
+
+
+def test_gate_fails_on_collapsed_ratio(tmp_path):
+    """Higher-is-better ratios (*_speedup, *_frac) are gated from below:
+    the measured overlap win must not collapse past baseline/tolerance."""
+    def collapse(ev):
+        ev["wall_clock"]["wall_tta_speedup"] = 1.0  # 4.0/3 = 1.33 floor
+    assert _run(tmp_path, collapse) == 1
+
+    def jitter(ev):
+        ev["wall_clock"]["overlap_frac"] = 0.4      # above 0.8/3 floor
+        ev["wall_clock"]["wall_tta_speedup"] = 9.0  # higher is never a fail
+    assert _run(tmp_path, jitter) == 0
 
 
 def test_gate_fails_on_byte_or_analytic_drift(tmp_path):
@@ -120,10 +135,15 @@ def test_gate_refuses_missing_files(tmp_path):
                       "--files", "kernels,absent"]) == 2
 
 
+# the evidence files the perf-gate CI job actually diffs (a superset of
+# gate.DEFAULT_FILES, which is only the CLI default)
+CI_GATED_FILES = "kernels,agg,lora,async"
+
+
 def test_committed_baselines_self_consistent():
     """gate(baseline, baseline) must pass for every committed evidence
     file the CI job diffs -- otherwise the perf-gate job is vacuous."""
-    for name in gate.DEFAULT_FILES.split(","):
+    for name in CI_GATED_FILES.split(","):
         path = os.path.join(BASELINES, f"{name}.json")
         assert os.path.exists(path), f"missing committed baseline {name}"
         refusals, regressions = gate.gate_file(path, path)
